@@ -1,0 +1,120 @@
+"""Paper §V-A microbenchmarks: GEMM and single-head attention on ITA.
+
+Model-predicted throughput/efficiency/utilization for the accelerated
+cluster, the standalone accelerator, and the software-only cluster —
+validated against the paper's numbers (741 GOp/s / 5.42 TOp/J / 85.1 %;
+663 GOp/s / 6.35 TOp/J / 74.9 %; standalone 79.6 %; cluster 0.74 GOp/s /
+28.9 GOp/J).  Also times the *functional* Pallas kernels (interpret mode
+on CPU — correctness path, not a wall-clock claim).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy import costmodel
+from repro.deploy.tiler import solve_gemm_tiling, solve_mha_tiling
+
+
+def model_rows():
+    hw = costmodel.HW
+    rows = []
+    # GEMM micro: 512^3 (the dimension class the accelerator is built for)
+    t = solve_gemm_tiling(512, 512, 512)
+    for standalone in (False, True):
+        cyc = costmodel.gemm_cycles(t, hw, standalone=standalone)
+        ops = 2 * 512**3
+        gops = ops / (cyc / hw.freq_hz) / 1e9
+        util = ops / (cyc * hw.ita_ops_per_cyc)
+        eff = gops / (hw.p_ita_gemm_w * 1e3)  # GOp/s / W -> TOp/J when /1e3
+        rows.append(
+            {
+                "bench": "gemm512" + ("_standalone" if standalone else ""),
+                "gop_s": round(gops, 1),
+                "top_j": round(gops / (hw.p_ita_gemm_w * 1e12 / 1e9), 2),
+                "util": round(util, 3),
+                "paper": "741 GOp/s, 5.42 TOp/J, 85.1%" if not standalone else "util 79.6% (standalone)",
+            }
+        )
+    # single-head attention micro: S=512, P=64, E=512 (projections + QK^T +
+    # streaming softmax + AV + partial O — the full ITA MHA kernel)
+    mt = solve_mha_tiling(512, 64)
+    cyc = costmodel.mha_head_cycles(mt, 512, hw)
+    ops = costmodel.mha_head_ops(512, 64, 512)
+    gops = ops / (cyc / hw.freq_hz) / 1e9
+    util = ops / (cyc * hw.ita_ops_per_cyc)
+    rows.append(
+        {
+            "bench": "attention_s512_p64",
+            "gop_s": round(gops, 1),
+            "top_j": round(gops / (hw.p_ita_attn_w * 1e12 / 1e9), 2),
+            "util": round(util, 3),
+            "paper": "663 GOp/s, 6.35 TOp/J, 74.9%",
+        }
+    )
+    cyc_sa = costmodel.mha_head_cycles(mt, 512, hw, standalone=True)
+    rows.append(
+        {
+            "bench": "attention_standalone",
+            "gop_s": round(ops / (cyc_sa / hw.freq_hz) / 1e9, 1),
+            "top_j": "-",
+            "util": round(ops / (cyc_sa * hw.ita_ops_per_cyc), 3),
+            "paper": "79.6% (standalone)",
+        }
+    )
+    # software-only cluster
+    gop_s = hw.cluster_gemm_ops_per_cyc * hw.freq_hz / 1e9
+    rows.append(
+        {
+            "bench": "cluster_only_gemm",
+            "gop_s": round(gop_s, 2),
+            "top_j": round(gop_s / (hw.p_cluster_w * 1e3), 4),
+            "util": "-",
+            "paper": "0.74 GOp/s, 28.9 GOp/J",
+        }
+    )
+    return rows
+
+
+def kernel_timings():
+    """Functional timings of the Pallas kernels (interpret mode)."""
+    from repro.kernels import int8_gemm, ita_attention
+
+    rng = np.random.default_rng(0)
+    out = []
+    x = jnp.asarray(rng.integers(-127, 128, (512, 512)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (512, 512)), jnp.int8)
+
+    def bench(fn, name, calls=3):
+        fn()  # compile/warm
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / calls * 1e6
+        out.append({"bench": name, "us_per_call": round(us, 1)})
+
+    bench(lambda: int8_gemm(x, w, None, s_in=0.02, s_w=0.004, s_out=0.05,
+                            block_m=128, block_n=128, block_k=256), "pallas_int8_gemm_512")
+    q = jnp.asarray(rng.integers(-127, 128, (1, 1, 512, 64)), jnp.int8)
+    bench(lambda: ita_attention(q, q, q, s_q=0.02, s_k=0.02, s_v=0.02, s_out=0.02,
+                                block_q=128, block_k=128), "pallas_ita_attention_s512")
+    return out
+
+
+def main():
+    rows = model_rows()
+    hdr = list(rows[0].keys())
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r[k]) for k in hdr))
+    for r in kernel_timings():
+        print(f"{r['bench']},{r['us_per_call']}us")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

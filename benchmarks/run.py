@@ -1,0 +1,48 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+  micro_gemm_attention  paper §V-A microbenchmarks (+ functional Pallas
+                        kernel timings, interpret mode)
+  table1_e2e            paper Table I (E2E networks, Multi-Core vs +ITA)
+  comparison_sota       paper §V-C commercial-device comparison
+  roofline              §Roofline terms from the dry-run artifacts
+
+Prints ``name,us_per_call,derived``-style CSV per section.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _section(title: str) -> None:
+    print(f"\n##### {title} " + "#" * max(1, 60 - len(title)), flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+
+    _section("micro_gemm_attention (paper §V-A)")
+    from benchmarks import micro_gemm_attention
+
+    micro_gemm_attention.main()
+
+    _section("table1_e2e (paper Table I)")
+    from benchmarks import table1_e2e
+
+    table1_e2e.main()
+
+    _section("comparison_sota (paper §V-C)")
+    from benchmarks import comparison_sota
+
+    comparison_sota.main()
+
+    _section("roofline (dry-run artifacts)")
+    from benchmarks import roofline
+
+    roofline.main()
+
+    print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

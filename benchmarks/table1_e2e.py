@@ -1,0 +1,87 @@
+"""Paper Table I reproduction: E2E network performance, Multi-Core vs +ITA.
+
+Builds the three networks' operator graphs, runs the Deeploy-style
+pipeline (MHA fusion -> head split -> mapping -> tiling), and evaluates
+the calibrated cost model.  The cluster-side constants are fit globally
+(least squares over the three measured E2E times); per-network residuals
+are reported — see EXPERIMENTS.md §Paper-validation for the discussion.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.deploy import costmodel, patterns
+from repro.deploy.graph import build_encoder_graph
+
+# Paper Table I measured values
+PAPER = {
+    "mobilebert": {"gop": 4.74, "inf_s": 32.5, "mj": 1.60, "mc_inf_s": 0.16, "mc_mj": 164.0},
+    "dinov2-small": {"gop": 11.7, "inf_s": 4.83, "mj": 7.31, "mc_inf_s": 0.06, "mc_mj": 407.0},
+    "whisper-tiny-encoder": {"gop": 9.74, "inf_s": 6.52, "mj": 5.55, "mc_inf_s": 0.08, "mc_mj": 340.0},
+}
+
+SEQ = {"mobilebert": 128, "dinov2-small": 241, "whisper-tiny-encoder": 512}
+
+
+def deployed_graph(name: str):
+    g = build_encoder_graph(get_config(name), seq_len=SEQ[name])
+    return patterns.deploy_pipeline(g, head_by_head=True)
+
+
+def run(fit: bool = True):
+    graphs = {n: deployed_graph(n) for n in PAPER}
+    hw = costmodel.HW
+    if fit:
+        measured = {n: (1.0 / PAPER[n]["inf_s"], graphs[n]) for n in PAPER}
+        d, c, residuals = costmodel.fit_cluster_constants(measured, hw)
+        hw = costmodel.HwConfig(dispatch_cyc_per_granule=d, aux_cyc_per_elem=c)
+    else:
+        residuals = {}
+
+    rows = []
+    for name, g in graphs.items():
+        ours = costmodel.network_cost(g, hw)
+        mc = costmodel.network_cost_cluster_only(g, hw)
+        p = PAPER[name]
+        rows.append(
+            {
+                "network": name,
+                "gop_model": round(ours.gop, 2),
+                "gop_paper": p["gop"],
+                # Multi-Core (no accelerator)
+                "mc_inf_s_model": round(mc.inf_per_s, 4),
+                "mc_inf_s_paper": p["mc_inf_s"],
+                "mc_mj_model": round(mc.mj_per_inf, 1),
+                "mc_mj_paper": p["mc_mj"],
+                # Multi-Core + ITA
+                "inf_s_model": round(ours.inf_per_s, 2),
+                "inf_s_paper": p["inf_s"],
+                "mj_model": round(ours.mj_per_inf, 2),
+                "mj_paper": p["mj"],
+                "gop_s_model": round(ours.gop_per_s, 1),
+                "gop_j_model": round(ours.gop_per_j, 0),
+                "t_ita_ms": round(ours.t_ita_s * 1e3, 2),
+                "t_cluster_ms": round(ours.t_cluster_s * 1e3, 2),
+                "speedup_model": round(ours.inf_per_s / mc.inf_per_s, 0),
+                "effgain_model": round(ours.gop_per_j / mc.gop_per_j, 0),
+            }
+        )
+    return rows, residuals, hw
+
+
+def main():
+    rows, residuals, hw = run()
+    print(f"# fitted cluster constants: dispatch={hw.dispatch_cyc_per_granule:.0f} cyc/granule, "
+          f"aux={hw.aux_cyc_per_elem:.2f} cyc/elem")
+    hdr = list(rows[0].keys())
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r[k]) for k in hdr))
+    print("\n# fit residuals (t_pred/t_meas):")
+    for n, r in residuals.items():
+        print(f"#   {n}: {r['ratio']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Demonstrates the full training substrate — deterministic sharded data
+pipeline, AdamW + cosine schedule, microbatched gradient accumulation,
+remat, QAT (fake-quant on the ITAMax logit grid + int8 weight grid),
+async checkpointing with restart supervision and straggler detection.
+
+Run (quick):   PYTHONPATH=src python examples/train_tinylm.py --steps 30
+Run (full):    PYTHONPATH=src python examples/train_tinylm.py --steps 300
+"""
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ShapeCell, get_config
+from repro.data import DataConfig, make_batch
+from repro.launch.train import make_train_step
+from repro.models import build
+from repro.optim import adamw
+from repro.runtime.fault import Supervisor
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--qat", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tinylm_ckpt")
+    args = ap.parse_args(argv)
+
+    # ~100M params: olmo-1b config narrowed (d=768, 12 layers)
+    cfg = get_config("olmo-1b").replace(
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab=32000, max_seq=args.seq,
+    )
+    api = build(cfg)
+    n_params = sum(
+        x.size for x in jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+        )
+    )
+    print(f"model: {cfg.name}-100m, {n_params/1e6:.1f}M params, qat={args.qat}")
+
+    params = api.init_params(jax.random.PRNGKey(0))
+    opt_state = adamw.init(params)
+    sched = functools.partial(
+        adamw.cosine_schedule, peak_lr=1e-3, warmup=5, total=max(args.steps, 100)
+    )
+
+    def loss_fn(p, b, **kw):
+        return api.loss_fn(p, b, qat=args.qat, **kw)
+
+    api_qat = type(api)(**{**api.__dict__, "loss_fn": loss_fn})
+    step_fn_jit = jax.jit(
+        make_train_step(api_qat, microbatches=2, lr_schedule=sched, remat=True)
+    )
+
+    dcfg = DataConfig(vocab=cfg.vocab, global_batch=args.batch, seq_len=args.seq)
+    cell = ShapeCell("tinylm", args.seq, args.batch, "train")
+    ck = Checkpointer(args.ckpt_dir)
+    sup = Supervisor(ck, save_every=max(args.steps // 3, 10))
+
+    def step(state, batch):
+        p, o = state
+        batch = jax.tree.map(jnp.asarray, batch)
+        p, o, metrics = step_fn_jit(p, o, batch)
+        return (p, o), metrics
+
+    t0 = time.time()
+    (params, opt_state), hist = sup.run(
+        step, (params, opt_state), lambda s: make_batch(cfg, cell, dcfg, s), 0, args.steps
+    )
+    dt = time.time() - t0
+    losses = [float(m["loss"]) for _, m in hist]
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(
+        f"{len(hist)} steps in {dt:.1f}s ({tok_s:,.0f} tok/s host-CPU); "
+        f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+        f"(improved: {losses[-1] < losses[0]})"
+    )
+    if args.steps >= 15:  # synthetic tokens converge toward ln(vocab)
+        assert losses[-1] < losses[0], "loss must decrease"
+    print(f"checkpoints at {args.ckpt_dir}: latest step {ck.latest_step()}")
+
+
+if __name__ == "__main__":
+    main()

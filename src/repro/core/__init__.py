@@ -1,0 +1,13 @@
+"""The paper's primary contribution, as composable JAX modules.
+
+- ``itamax``       : ITA's streaming integer softmax (DA/DI/EN), rowwise
+                     (paper-faithful) and flash-blocked (TPU adaptation).
+- ``igelu``        : integer GeLU/ReLU activation unit (I-BERT polynomial).
+- ``ilayernorm``   : integer LayerNorm/RMSNorm fallback ("cluster") ops.
+- ``quant_linear`` : int8 GEMM + requant + fused activation (ITA GEMM mode).
+- ``attention``    : quantized multi-head attention assembled from the
+                     above (head-by-head paper mode and fused TPU mode).
+- ``heterogeneous``: accelerated-vs-fallback operator dispatch.
+"""
+
+from repro.core import igelu, ilayernorm, itamax  # noqa: F401

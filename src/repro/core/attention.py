@@ -1,0 +1,243 @@
+"""Quantized multi-head attention assembled from ITA's primitives.
+
+Three integer execution styles (all bit-defined, XLA path):
+
+* :func:`attention_rowwise_i8` — the paper-faithful ITA dataflow:
+  int8 ``Q K^T`` -> requant onto the ITAMax logit grid -> rowwise ITAMax
+  (8-bit ``A``) -> int8 ``A V`` -> requant.  The ASIC runs rows of length
+  <= 512; here the row is the whole KV length (used for short sequences,
+  the paper's encoder models, and as the oracle for the Pallas kernel).
+* :func:`attention_flash_i8` — the TPU adaptation: single pass over KV
+  blocks with the flash-ITAMax state (long sequences; the Pallas
+  ``ita_attention`` kernel implements this same computation per grid
+  step).
+* :func:`attention_decode_i8` — one new token against an int8 KV cache
+  (serving path).
+
+GQA is handled by repeating KV heads; the 1/sqrt(d_head) factor and all
+quantization scales fold into the logit requantization multiplier.
+
+The paper's head-by-head schedule (ITA is a single-head datapath; the
+cluster sums partial output projections) is reproduced at the model layer
+(``repro.models.layers.mha_block``) via ``ita_head_by_head=True``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import itamax as im
+from repro.quant.qparams import make_qparams, requantize
+
+NEG_MASK_I32 = -(1 << 20)
+
+
+class MhaQParams(NamedTuple):
+    logit_mult: int
+    logit_shift: int
+    out_mult: int
+    out_shift: int
+
+    @staticmethod
+    def make(s_q: float, s_k: float, s_v: float, s_out: float, d_head: int) -> "MhaQParams":
+        lq = make_qparams(s_q, s_k / math.sqrt(d_head), im.ITAMAX_LOGIT_SCALE)
+        oq = make_qparams(im.A_SCALE, s_v, s_out)
+        return MhaQParams(lq.mult, lq.shift, oq.mult, oq.shift)
+
+    @staticmethod
+    def make_flash(s_q: float, s_k: float, s_v: float, s_out: float, d_head: int) -> "MhaQParams":
+        lq = make_qparams(s_q, s_k / math.sqrt(d_head), im.ITAMAX_LOGIT_SCALE)
+        # flash finalize yields Q7.7 in units of s_v
+        oq = make_qparams(2.0 ** (-7), s_v, s_out)
+        return MhaQParams(lq.mult, lq.shift, oq.mult, oq.shift)
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(b, h * n_rep, s, d)
+
+
+def _causal_mask(sq: int, sk: int, q_offset) -> jnp.ndarray:
+    """True = attend. Query i attends keys j <= i + q_offset."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    return kj <= qi + q_offset
+
+
+def attention_rowwise_i8(
+    q_q: jnp.ndarray,  # int8 [B, H, Sq, D]
+    k_q: jnp.ndarray,  # int8 [B, Hkv, Sk, D]
+    v_q: jnp.ndarray,  # int8 [B, Hkv, Sk, D]
+    p: MhaQParams,
+    causal: bool = False,
+    mask: jnp.ndarray | None = None,  # bool, broadcastable to [B,H,Sq,Sk]
+) -> jnp.ndarray:
+    """Paper-faithful ITA attention (full logits row). Returns int8."""
+    h, hkv = q_q.shape[1], k_q.shape[1]
+    k_q = _repeat_kv(k_q, h // hkv)
+    v_q = _repeat_kv(v_q, h // hkv)
+    acc = jnp.einsum(
+        "bhqd,bhkd->bhqk", q_q.astype(jnp.int8), k_q.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+    logits = requantize(acc, p.logit_mult, p.logit_shift)
+    full_mask = None
+    if causal:
+        full_mask = _causal_mask(q_q.shape[2], k_q.shape[2], k_q.shape[2] - q_q.shape[2])
+    if mask is not None:
+        full_mask = mask if full_mask is None else (full_mask & mask)
+    a = im.itamax_rowwise(logits, mask=full_mask)  # int8 [B,H,Sq,Sk]
+    out = jnp.einsum(
+        "bhqk,bhkd->bhqd", a.astype(jnp.int8), v_q.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+    return requantize(out, p.out_mult, p.out_shift)
+
+
+def attention_flash_i8(
+    q_q: jnp.ndarray,  # int8 [B, H, Sq, D]
+    k_q: jnp.ndarray,  # int8 [B, Hkv, Sk, D]
+    v_q: jnp.ndarray,  # int8 [B, Hkv, Sk, D]
+    p: MhaQParams,
+    causal: bool = False,
+    block_k: int = 512,
+    kv_len: jnp.ndarray | None = None,  # int32 valid KV length (decode)
+) -> jnp.ndarray:
+    """Flash-ITAMax attention: lax.scan over KV blocks. Returns int8.
+
+    Bit-exact vs. the Pallas ``ita_attention`` kernel at equal block size.
+    """
+    from repro.runtime.activations import constrain
+
+    b, h, sq, d = q_q.shape
+    hkv, sk = k_q.shape[1], k_q.shape[2]
+    k_q = _repeat_kv(k_q, h // hkv)
+    v_q = _repeat_kv(v_q, h // hkv)
+    # Head-parallel (seq fallback for odd GQA). Only q: K/V's seq dim is
+    # the scanned dim — sharding it would gather per scan step.
+    q_q = constrain(q_q, "heads")
+    assert sk % block_k == 0, (sk, block_k)
+    nblk = sk // block_k
+
+    kb = k_q.reshape(b, h, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v_q.reshape(b, h, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+
+    q_i8 = q_q.astype(jnp.int8)
+    state0 = im.flash_init((b, h, sq), d)
+    q_off = sk - sq  # causal alignment: query i is global position i + q_off
+
+    def step(state, inp):
+        blk_idx, k_blk, v_blk = inp
+        acc = jnp.einsum(
+            "bhqd,bhkd->bhqk", q_i8, k_blk.astype(jnp.int8),
+            preferred_element_type=jnp.int32,
+        )
+        logits = requantize(acc, p.logit_mult, p.logit_shift)
+        mask = None
+        if causal or kv_len is not None:
+            kj = jax.lax.broadcasted_iota(jnp.int32, (sq, block_k), 1) + blk_idx * block_k
+            mask = jnp.ones((sq, block_k), bool)
+            if causal:
+                qi = jax.lax.broadcasted_iota(jnp.int32, (sq, block_k), 0)
+                mask = mask & (kj <= qi + q_off)
+            if kv_len is not None:
+                mask = mask & (kj < kv_len)
+            mask = jnp.broadcast_to(mask, (b, h, sq, block_k))
+        new_state = im.flash_block_update(state, logits, v_blk, mask)
+        return new_state, None
+
+    idx = jnp.arange(nblk, dtype=jnp.int32)
+    state, _ = jax.lax.scan(step, state0, (idx, kb, vb))
+    q77 = im.flash_finalize_q77(state)
+    return requantize(q77, p.out_mult, p.out_shift)
+
+
+def attention_decode_i8(
+    q_q: jnp.ndarray,  # int8 [B, H, 1, D]
+    k_cache: jnp.ndarray,  # int8 [B, Hkv, Smax, D]
+    v_cache: jnp.ndarray,  # int8 [B, Hkv, Smax, D]
+    cache_len: jnp.ndarray,  # int32 [] or [B] — valid entries in the cache
+    p: MhaQParams,
+    block_k: int = 2048,
+) -> jnp.ndarray:
+    """One-token decode against an int8 KV cache (flash path, masked)."""
+    if cache_len.ndim == 1:
+        kv_len = cache_len[:, None, None, None]
+    else:
+        kv_len = cache_len
+    return attention_flash_i8(
+        q_q, k_cache, v_cache, p, causal=False, block_k=block_k, kv_len=kv_len
+    )
+
+
+# Float reference -------------------------------------------------------------
+
+def attention_f32_chunked(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,
+    causal: bool = False,
+    block_q: int = 1024,
+    logit_clip: float | None = None,
+) -> jnp.ndarray:
+    """Float flash-style attention: scan over Q blocks, online softmax over
+    KV.  Never materializes the S x S logits — the train-path analogue of
+    the ITAMax streaming dataflow (memory O(S) instead of O(S^2))."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    if sq % block_q:
+        return attention_f32(q, k, v, causal=causal, logit_clip=logit_clip)
+    scale = 1.0 / math.sqrt(d)
+    nblk = sq // block_q
+    qb = q.reshape(b, h, nblk, block_q, d).transpose(2, 0, 1, 3, 4)
+    q_off = sk - sq
+
+    def one_block(args):
+        qi, idx = args
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qi, k) * scale
+        if logit_clip is not None:
+            logits = jnp.clip(logits, -logit_clip, logit_clip)
+        if causal:
+            qpos = jax.lax.broadcasted_iota(jnp.int32, (block_q, sk), 0) + idx * block_q + q_off
+            kpos = jax.lax.broadcasted_iota(jnp.int32, (block_q, sk), 1)
+            neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+            logits = jnp.where((kpos <= qpos)[None, None], logits, neg)
+        a = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(qi.dtype)
+        return jnp.einsum("bhqk,bhkd->bhqd", a, v)
+
+    out = jax.lax.map(one_block, (qb, jnp.arange(nblk)))
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, d)
+
+
+def attention_f32(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,
+    causal: bool = False,
+    mask: jnp.ndarray | None = None,
+    logit_clip: float | None = None,
+) -> jnp.ndarray:
+    """Standard float attention; ``logit_clip`` mimics the int8 logit range
+    (+- 127 * ITAMAX_LOGIT_SCALE) for QAT parity with the integer path."""
+    h, hkv = q.shape[1], k.shape[1]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(q.shape[-1])
+    if logit_clip is not None:
+        logits = jnp.clip(logits, -logit_clip, logit_clip)
+    neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+    if causal:
+        cm = _causal_mask(q.shape[2], k.shape[2], k.shape[2] - q.shape[2])
+        logits = jnp.where(cm, logits, neg)
+    if mask is not None:
+        logits = jnp.where(mask, logits, neg)
+    a = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", a, v)

@@ -1,0 +1,93 @@
+"""Heterogeneous dispatch — the "ITA or cluster" decision, per operator.
+
+The paper's template maps each DNN operator either to the accelerator
+(GEMM / MHA / supported activations, when shapes satisfy the geometric
+constraints) or to fallback kernels on the cluster cores.  Here the
+"accelerator" is the Pallas kernel path (or the w8a8 XLA integer path on
+non-TPU hosts) and the "cluster" is plain XLA.
+
+``repro.deploy`` makes the static mapping decision per graph node; this
+module holds the runtime registry and the geometric support predicate the
+planner queries — the direct analogue of Deeploy's accelerator model
+("first, the accelerator model must specify the geometrical tiling
+constraints for operators it can run").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+
+class Backend(enum.Enum):
+    FLOAT = "float"  # bf16/f32 reference ("cluster-only" at model level)
+    W8A8 = "w8a8"  # XLA integer path (paper-faithful arithmetic)
+    ITA = "ita"  # Pallas kernels (TPU target / interpret on CPU)
+
+
+class Engine(enum.Enum):
+    ACCELERATOR = "ita"
+    CLUSTER = "cluster"
+
+
+# ITA geometric constraints (Section IV-B): vector length M=64, dimensions
+# up to 512, 64-granule tiles.  The TPU adaptation aligns to the MXU/VMEM
+# granule of 128 instead; both are checked by the planner.
+ITA_GRANULE = 64
+ITA_MAX_DIM = 512
+TPU_GRANULE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OpDesc:
+    """Shape/type description of one operator instance."""
+
+    kind: str  # "gemm" | "mha" | "layernorm" | "rmsnorm" | "softmax" | ...
+    shapes: tuple[tuple[int, ...], ...]
+    dtype: str = "int8"
+    act: str = "identity"
+
+
+#: ops the accelerator datapath supports at all
+ACCEL_KINDS = {"gemm", "mha", "relu", "gelu", "identity"}
+
+
+def ita_supports(op: OpDesc, granule: int = ITA_GRANULE) -> bool:
+    """Would ITA (resp. the Pallas kernel set) accept this op?
+
+    The ASIC requires int8 operands and 64-aligned dims; dims beyond 512
+    are handled by *tiling*, so only alignment matters here.  Non-int8 or
+    unsupported kinds fall back to the cluster.
+    """
+    if op.kind not in ACCEL_KINDS:
+        return False
+    if op.dtype != "int8":
+        return False
+    for shape in op.shapes:
+        for d in shape[-2:]:  # contracting/output dims must be aligned
+            if d % granule != 0:
+                return False
+    return True
+
+
+@dataclasses.dataclass
+class DispatchTable:
+    """Runtime registry: op kind -> {engine -> callable}."""
+
+    table: dict[str, dict[Engine, Callable]] = dataclasses.field(default_factory=dict)
+
+    def register(self, kind: str, engine: Engine, fn: Callable) -> None:
+        self.table.setdefault(kind, {})[engine] = fn
+
+    def resolve(self, op: OpDesc, backend: Backend) -> tuple[Engine, Callable]:
+        entry = self.table[op.kind]
+        if backend is Backend.FLOAT:
+            return Engine.CLUSTER, entry[Engine.CLUSTER]
+        granule = TPU_GRANULE if backend is Backend.ITA else ITA_GRANULE
+        if ita_supports(op, granule) and Engine.ACCELERATOR in entry:
+            return Engine.ACCELERATOR, entry[Engine.ACCELERATOR]
+        return Engine.CLUSTER, entry[Engine.CLUSTER]
+
+
+DEFAULT_TABLE = DispatchTable()

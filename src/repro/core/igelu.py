@@ -1,0 +1,110 @@
+"""i-GeLU — ITA's integer-only GeLU activation (I-BERT polynomial).
+
+ITA's activation unit supports Identity / ReLU / GeLU, with GeLU computed
+via the i-GeLU algorithm of I-BERT (Kim et al., ICML'21):
+
+    GeLU(x) = x/2 * (1 + erf(x / sqrt(2)))
+    erf(x) ~= sgn(x) * [a * (clip(|x|, max=-b) + b)^2 + c]
+    a = -0.2888, b = -1.769, c = 1
+
+performed entirely in integer arithmetic given the input scale.  In ITA
+the unit operates on the D-bit accumulator; on TPU we apply it to the
+int8-requantized pre-activation (I-BERT's own formulation), which keeps
+every intermediate inside int32 for activation scales >= ~1e-3 (asserted
+at plan time in ``repro.quant.ptq``).
+
+``igelu_int`` returns the raw int32 polynomial output plus its scale so
+the caller can fold the following requantization into one step;
+``igelu_i8`` is the fused int8-in/int8-out convenience op.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.quant.qparams import QParams, make_qparams, requantize
+
+ERF_A = -0.2888
+ERF_B = -1.769
+ERF_C = 1.0
+
+# Minimum input scale for int32 safety of the polynomial (see module doc).
+MIN_GELU_SCALE = 1e-3
+
+
+class IGeluParams(NamedTuple):
+    """Static integer constants for one i-GeLU site (input scale baked in)."""
+
+    q_b: int          # floor(b / S_erf)                  (negative)
+    q_c: int          # floor(c / (a * S_erf^2))          (negative)
+    q_1: int          # floor(1 / S_L) with S_L = a*S_erf^2  (negative)
+    out_scale: float  # scale of the returned int32 value (positive)
+
+
+def make_igelu_params(in_scale: float) -> IGeluParams:
+    if in_scale < MIN_GELU_SCALE:
+        raise ValueError(
+            f"i-GeLU input scale {in_scale:.2e} < {MIN_GELU_SCALE:.0e}; "
+            "int32 overflow risk — clamp the calibrated activation range."
+        )
+    s_erf = in_scale / math.sqrt(2.0)
+    s_l = ERF_A * s_erf * s_erf  # negative
+    q_b = int(math.floor(ERF_B / s_erf))
+    q_c = int(math.floor(ERF_C / s_l))
+    q_1 = int(math.floor(1.0 / s_l))
+    # igelu_int negates the raw product so the effective scale is positive.
+    out_scale = in_scale * (-s_l) / 2.0
+    return IGeluParams(q_b=q_b, q_c=q_c, q_1=q_1, out_scale=out_scale)
+
+
+def igelu_int(q: jnp.ndarray, p: IGeluParams) -> jnp.ndarray:
+    """int8/int16 ``q`` -> int32 i-GeLU output with scale ``p.out_scale``.
+
+    All operations are int32; for |q| <= 127 and scale >= 1e-3 the largest
+    intermediate is |q| * 2 * |q_c| < 2^31.  The raw I-BERT product carries
+    the (negative) scale ``a * S_erf^2``; we return its negation so callers
+    always see a positive ``out_scale``.
+    """
+    q = jnp.asarray(q, jnp.int32)
+    sgn = jnp.sign(q)
+    q_abs = jnp.minimum(jnp.abs(q), -p.q_b)
+    q_l = (q_abs + p.q_b) * (q_abs + p.q_b) + p.q_c  # i-poly, negative
+    q_erf = sgn * q_l
+    return -(q * (q_erf + p.q_1))
+
+
+def igelu_i8(q: jnp.ndarray, in_scale: float, out_scale: float) -> jnp.ndarray:
+    """Fused int8 -> int8 i-GeLU (requantization folded)."""
+    p = make_igelu_params(in_scale)
+    raw = igelu_int(q, p)
+    qp = make_qparams(p.out_scale, 1.0, out_scale)
+    return requantize(raw, qp.mult, qp.shift)
+
+
+def gelu_f32(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact float GeLU (erf form) — accuracy reference."""
+    return 0.5 * x * (1.0 + jax_erf(x / math.sqrt(2.0)))
+
+
+def jax_erf(x):
+    import jax
+
+    return jax.scipy.special.erf(x)
+
+
+def igelu_f32(x: jnp.ndarray) -> jnp.ndarray:
+    """Float evaluation of the I-BERT polynomial (approximation target)."""
+    s = jnp.sign(x)
+    xa = jnp.minimum(jnp.abs(x) / math.sqrt(2.0), -ERF_B)
+    l = ERF_A * (xa + ERF_B) ** 2 + ERF_C
+    return 0.5 * x * (1.0 + s * l)
+
+
+def irelu_i8(q: jnp.ndarray, in_scale: float, out_scale: float) -> jnp.ndarray:
+    """Integer ReLU with requantization (ITA activation unit mode 1)."""
+    q = jnp.maximum(jnp.asarray(q, jnp.int32), 0)
+    qp = make_qparams(in_scale, 1.0, out_scale)
+    return requantize(q, qp.mult, qp.shift)

@@ -1,0 +1,128 @@
+"""Integer LayerNorm / RMSNorm — the "auxiliary operators on the cluster".
+
+In the paper these run as fallback kernels on the Snitch cores (the
+accelerator does not support them) — normalization variants change across
+model families, which is exactly why they stay on the general-purpose
+path.  We implement them integer-only in the I-BERT style so the ``w8a8``
+backend is int8 end-to-end:
+
+* mean/variance in int32 (inputs are int8, so ``sum((x-mu)^2)`` fits int32
+  for rows up to ~16k wide),
+* ``1/sigma`` via an integer Newton square root with fixed iteration
+  count (hardware-friendly, branch-free),
+* normalized value in Q.K fixed point, then an affine (gamma, beta) fold
+  and a standard requantize to int8.
+
+Variants:
+  - ``ilayernorm_i8``     : full LN with int8 affine params
+  - ``ilayernorm_np_i8``  : OLMo-style *non-parametric* LN (no gamma/beta)
+  - ``irmsnorm_i8``       : RMSNorm (no centering), LLaMA-family default
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qparams import make_qparams, requantize
+
+# Fixed-point bits of the normalized value (x - mu) / sigma.
+NORM_BITS = 10
+NORM_SCALE = 2.0 ** (-NORM_BITS)
+
+_ISQRT_ITERS = 20
+
+
+def isqrt(v: jnp.ndarray) -> jnp.ndarray:
+    """floor(sqrt(v)) for int32 v >= 0 via fixed-iteration Newton descent."""
+    v = jnp.asarray(v, jnp.int32)
+    x0 = jnp.full(v.shape, 1 << 16, jnp.int32)  # >= sqrt(2^31)
+
+    def body(_, x):
+        x_safe = jnp.maximum(x, 1)
+        y = (x_safe + v // x_safe) >> 1
+        return jnp.minimum(x, y)  # monotone from above
+
+    x = jax.lax.fori_loop(0, _ISQRT_ITERS, body, x0)
+    x = jnp.clip(x, 1, 46340)  # sqrt(2^31) bound, keeps x*x in int32
+    # Final fix-ups (Newton may oscillate by one around the floor).
+    x = jnp.where(x * x > v, x - 1, x)
+    x = jnp.where(x * x > v, x - 1, x)
+    return jnp.maximum(x, 1)
+
+
+def _normalize_q(x_i8: jnp.ndarray, center: bool) -> jnp.ndarray:
+    """int8 row -> Q.NORM_BITS fixed-point normalized value (int32)."""
+    x = jnp.asarray(x_i8, jnp.int32)
+    n = x.shape[-1]
+    if center:
+        mu = jnp.sum(x, axis=-1, keepdims=True)
+        # round-half-up division by n
+        mu = jnp.where(mu >= 0, (mu + n // 2) // n, -((-mu + n // 2) // n))
+        xc = x - mu
+    else:
+        xc = x
+    # var * n  (keeps integer; |xc| <= 255 -> xc^2 <= 65025; n <= 16k ok)
+    ss = jnp.sum(xc * xc, axis=-1, keepdims=True)
+    var = ss // n
+    sigma = isqrt(var)  # >= 1
+    return (xc << NORM_BITS) // sigma  # |.| <= 255 * 2^10 / 1 < 2^19
+
+
+def ilayernorm_i8(
+    x_i8: jnp.ndarray,
+    gamma_q: jnp.ndarray,  # int8, scale s_gamma
+    beta_q: jnp.ndarray,  # int32, scale NORM_SCALE * s_gamma (pre-folded)
+    s_gamma: float,
+    out_scale: float,
+) -> jnp.ndarray:
+    """Full integer LayerNorm: int8 in -> int8 out.
+
+    ``beta`` must be pre-quantized with scale ``NORM_SCALE * s_gamma`` so it
+    adds directly onto ``norm_q * gamma_q`` (done by the PTQ flow).
+    """
+    norm_q = _normalize_q(x_i8, center=True)  # ~ +-2^19? bounded ~2^18
+    acc = norm_q * jnp.asarray(gamma_q, jnp.int32) + jnp.asarray(beta_q, jnp.int32)
+    qp = make_qparams(NORM_SCALE, s_gamma, out_scale)
+    return requantize(acc, qp.mult, qp.shift)
+
+
+def ilayernorm_np_i8(x_i8: jnp.ndarray, out_scale: float) -> jnp.ndarray:
+    """Non-parametric LayerNorm (OLMo): normalize, requantize, done."""
+    norm_q = _normalize_q(x_i8, center=True)
+    qp = make_qparams(NORM_SCALE, 1.0, out_scale)
+    return requantize(norm_q, qp.mult, qp.shift)
+
+
+def irmsnorm_i8(
+    x_i8: jnp.ndarray,
+    gamma_q: jnp.ndarray,
+    s_gamma: float,
+    out_scale: float,
+) -> jnp.ndarray:
+    """Integer RMSNorm (no centering)."""
+    norm_q = _normalize_q(x_i8, center=False)
+    acc = norm_q * jnp.asarray(gamma_q, jnp.int32)
+    qp = make_qparams(NORM_SCALE, s_gamma, out_scale)
+    return requantize(acc, qp.mult, qp.shift)
+
+
+# Float references -----------------------------------------------------------
+
+def layernorm_f32(x, gamma=None, beta=None, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma
+    if beta is not None:
+        y = y + beta
+    return y
+
+
+def rmsnorm_f32(x, gamma=None, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    if gamma is not None:
+        y = y * gamma
+    return y

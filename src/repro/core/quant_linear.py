@@ -1,0 +1,114 @@
+"""Quantized linear layer — ITA's GEMM mode with fused activation.
+
+``ITA can be used as a GEMM accelerator with activation functions
+accelerated in hardware'' — int8 x int8 -> int32 accumulate, add int32
+bias, fixed-point requantize, optional Identity / ReLU / i-GeLU epilogue.
+
+This module is the XLA (``w8a8``) implementation; ``repro.kernels.int8_gemm``
+is the Pallas version of the same computation and must match bit-exactly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.igelu import IGeluParams, igelu_int, make_igelu_params
+from repro.quant.qparams import make_qparams, requantize
+
+ACT_IDENTITY = 0
+ACT_RELU = 1
+ACT_GELU = 2
+
+
+class QLinearParams(NamedTuple):
+    """Integer-side parameters of one quantized linear site.
+
+    ``mult``/``shift`` requantize the int32 accumulator to the int8
+    pre-activation grid; scalars (per-tensor) or [N] arrays (per-channel).
+    For ACT_GELU, ``gelu`` holds the i-GeLU constants for the
+    pre-activation scale and ``gelu_mult``/``gelu_shift`` requantize the
+    i-GeLU int32 output to the final int8 output grid.
+    """
+
+    mult: jnp.ndarray | int
+    shift: jnp.ndarray | int
+    act: int
+    gelu: IGeluParams | None = None
+    gelu_mult: int = 0
+    gelu_shift: int = 31
+
+
+def make_qlinear_params(
+    s_in: float,
+    s_w,
+    s_out: float,
+    act: int = ACT_IDENTITY,
+    s_preact: float | None = None,
+) -> QLinearParams:
+    """Build integer params from float scales.
+
+    For Identity/ReLU the accumulator requantizes straight to ``s_out``.
+    For GeLU the accumulator first requantizes to ``s_preact`` (the
+    calibrated pre-activation int8 grid), i-GeLU runs on that, and a second
+    requant maps onto ``s_out``.
+    """
+    import numpy as np
+
+    from repro.quant.qparams import np_quantize_multiplier
+
+    s_w_arr = np.asarray(s_w, np.float64).reshape(-1)
+    if act == ACT_GELU:
+        assert s_preact is not None
+        real = s_in * s_w_arr / s_preact
+    else:
+        real = s_in * s_w_arr / s_out
+    mult, shift = np_quantize_multiplier(real)
+    if mult.size == 1:
+        mult_v, shift_v = int(mult[0]), int(shift[0])
+    else:
+        mult_v, shift_v = jnp.asarray(mult), jnp.asarray(shift)
+    if act == ACT_GELU:
+        gp = make_igelu_params(s_preact)
+        qp = make_qparams(gp.out_scale, 1.0, s_out)
+        return QLinearParams(mult_v, shift_v, act, gp, qp.mult, qp.shift)
+    return QLinearParams(mult_v, shift_v, act)
+
+
+def qlinear_i8(
+    x_q: jnp.ndarray,  # int8 [..., K]
+    w_q: jnp.ndarray,  # int8 [K, N]
+    bias_q: jnp.ndarray | None,  # int32 [N], scale s_in*s_w
+    p: QLinearParams,
+) -> jnp.ndarray:
+    """int8 -> int8 quantized linear with fused activation epilogue."""
+    acc = jnp.matmul(
+        x_q.astype(jnp.int8), w_q.astype(jnp.int8), preferred_element_type=jnp.int32
+    )
+    if bias_q is not None:
+        acc = acc + bias_q.astype(jnp.int32)
+    if p.act == ACT_IDENTITY:
+        return requantize(acc, p.mult, p.shift)
+    if p.act == ACT_RELU:
+        return requantize(jnp.maximum(acc, 0), p.mult, p.shift)
+    if p.act == ACT_GELU:
+        pre = requantize(acc, p.mult, p.shift)  # int8 pre-activation
+        raw = igelu_int(pre, p.gelu)
+        return requantize(raw, p.gelu_mult, p.gelu_shift)
+    raise ValueError(f"unknown act {p.act}")
+
+
+# Float reference -------------------------------------------------------------
+
+def linear_f32(x, w, bias=None, act: int = ACT_IDENTITY):
+    y = x @ w
+    if bias is not None:
+        y = y + bias
+    if act == ACT_RELU:
+        y = jnp.maximum(y, 0)
+    elif act == ACT_GELU:
+        from repro.core.igelu import gelu_f32
+
+        y = gelu_f32(y)
+    return y

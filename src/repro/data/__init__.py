@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, PrefetchIterator, make_batch  # noqa: F401

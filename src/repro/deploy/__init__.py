@@ -1,0 +1,9 @@
+"""Deployment flow (Deeploy analogue) + dry-run HLO analysis.
+
+graph -> patterns (MHA fusion, head split, engine mapping) -> tiler
+(geometric constraints) -> memory (static layout) -> costmodel
+(calibrated Snitch+ITA cycles/energy).  ``hlo_analysis`` is the TPU-side
+"profiler" reading compiled dry-run artifacts.
+"""
+
+from repro.deploy import costmodel, graph, hlo_analysis, memory, patterns, tiler  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.kernels.igelu.ops import igelu  # noqa: F401
+from repro.kernels.igelu.ref import igelu_ref  # noqa: F401

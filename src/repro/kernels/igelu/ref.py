@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the i-GeLU kernel."""
+
+from repro.core.igelu import igelu_i8
+
+
+def igelu_ref(x_q, *, in_scale: float, out_scale: float):
+    return igelu_i8(x_q, in_scale, out_scale)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused attention kernel: the w8a8 flash path."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.attention import MhaQParams, attention_flash_i8
+
+
+def ita_attention_ref(
+    q_q: jnp.ndarray,
+    k_q: jnp.ndarray,
+    v_q: jnp.ndarray,
+    *,
+    s_q: float,
+    s_k: float,
+    s_v: float,
+    s_out: float,
+    causal: bool = False,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    d = q_q.shape[-1]
+    p = MhaQParams.make_flash(s_q, s_k, s_v, s_out, d)
+    block_k = min(block_k, k_q.shape[2])
+    return attention_flash_i8(q_q, k_q, v_q, p, causal=causal, block_k=block_k)

@@ -1,0 +1,2 @@
+from repro.kernels.itamax.ops import itamax  # noqa: F401
+from repro.kernels.itamax.ref import itamax_ref  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the standalone ITAMax kernel."""
+
+from repro.core.itamax import itamax_rowwise
+
+
+def itamax_ref(logits):
+    return itamax_rowwise(logits)

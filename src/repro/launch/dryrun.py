@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the real step
+function — ``train_step`` (AdamW, remat, microbatching) for train cells,
+``prefill`` / ``serve_step`` for inference cells — against the production
+mesh, with full parameter/optimizer/batch/cache shardings.  Success proves
+the distribution config is coherent; the compiled artifact provides
+memory_analysis (fits?) and cost_analysis (FLOPs/bytes) plus the
+collective schedule parsed from the partitioned HLO (§Roofline inputs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, get_config, list_archs, shape_applicable
+from repro.deploy.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import build, input_specs
+from repro.optim import adamw
+from repro.runtime.activations import activation_policy
+from repro.runtime.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+
+# train-cell microbatch counts (memory fitting; the global batch is fixed)
+MICROBATCHES = {
+    "qwen1.5-110b": 16,
+    "mistral-large-123b": 16,
+    "llava-next-34b": 8,
+    "seamless-m4t-large-v2": 4,
+    "zamba2-2.7b": 4,
+    "mamba2-370m": 2,
+    "qwen2-moe-a2.7b": 2,
+}
+
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, seed: int = 0):
+    """Returns (fn, arg_specs, in_shardings, meta) for one cell."""
+    cfg = get_config(arch)
+    cell = next(c for c in ALL_SHAPES if c.name == shape_name)
+    api = build(cfg)
+    key = jax.random.PRNGKey(seed)
+
+    if cell.kind == "train":
+        from repro.launch.train import make_train_step
+
+        params = jax.eval_shape(lambda: api.init_params(key, jnp.bfloat16))
+        opt_state = jax.eval_shape(lambda: adamw.init(params))
+        batch = input_specs(cfg, cell, jnp.bfloat16)
+        mb = MICROBATCHES.get(arch, 1)
+        step = make_train_step(api, microbatches=mb, remat=True)
+        # ZeRO-3/FSDP: params + optimizer fully sharded (data axes included)
+        p_sh = param_shardings(mesh, params, fsdp=True)
+        o_sh = opt_state_shardings(mesh, opt_state, p_sh)
+        b_sh = batch_shardings(mesh, batch)
+        return step, (params, opt_state, batch), (p_sh, o_sh, b_sh), {
+            "microbatches": mb,
+            "kind": "train",
+            "fsdp": True,
+        }
+
+    sparams = jax.eval_shape(lambda: api.init_serve_params(key))
+    sp_sh = param_shardings(mesh, sparams)
+    if cell.kind == "prefill":
+        batch = input_specs(cfg, cell, jnp.bfloat16)
+        b_sh = batch_shardings(mesh, batch)
+        fn = lambda sp, b: api.prefill(sp, b, cell.seq_len)  # noqa: E731
+        return fn, (sparams, batch), (sp_sh, b_sh), {"kind": "prefill"}
+
+    # decode
+    cache = jax.eval_shape(api.init_cache_shape(cell.global_batch, cell.seq_len))
+    seq_shard = cell.name == "long_500k"
+    c_sh = cache_shardings(mesh, cache, seq_shard=seq_shard)
+    token = input_specs(cfg, cell)["token"]
+    t_sh = batch_shardings(mesh, {"token": token})["token"]
+    fn = api.decode_step
+    return fn, (sparams, cache, token), (sp_sh, c_sh, t_sh), {"kind": "decode"}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str) -> dict:
+    cfg = get_config(arch)
+    cell = next(c for c in ALL_SHAPES if c.name == shape_name)
+    ok, reason = shape_applicable(cfg, cell)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, specs, shardings, meta = build_cell(arch, shape_name, mesh)
+        rec.update(meta)
+        with mesh, activation_policy(mesh, sequence_parallel=(meta["kind"] == "train")):
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analyze_hlo(compiled.as_text())  # multiplicity-aware (per device)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            xla_cost_flops=float(cost.get("flops", -1.0)) if cost else -1.0,
+            flops=hlo["flops"],
+            mem_bytes=hlo["mem_bytes"],
+            collectives={
+                "bytes_by_op": hlo["collective_by_op"],
+                "op_counts": hlo["collective_counts"],
+                "total_bytes": hlo["collective_bytes"],
+            },
+        )
+        if mem is not None:
+            for attr in (
+                "generated_code_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                if hasattr(mem, attr):
+                    rec[attr] = int(getattr(mem, attr))
+    except Exception as e:  # noqa: BLE001 — failures are findings
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch.replace('/', '_')}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else [a for a in list_archs()[:10]]
+    shapes = [args.shape] if args.shape else [c.name for c in ALL_SHAPES]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out_dir)
+                status = rec["status"]
+                extra = (
+                    f"flops={rec.get('flops', 0):.3e} "
+                    f"coll={rec.get('collectives', {}).get('total_bytes', 0):.3e}B "
+                    f"compile={rec.get('compile_s', 0)}s"
+                    if status == "ok"
+                    else rec.get("reason", rec.get("error", ""))[:120]
+                )
+                print(f"[{status:7s}] {arch:22s} {shape:12s} {rec['mesh']:8s} {extra}",
+                      flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

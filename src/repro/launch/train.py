@@ -1,0 +1,148 @@
+"""Training driver: pjit train step with microbatched gradient accumulation,
+remat, SP activation sharding, optional int8 cross-pod gradient compression,
+and checkpoint/restart supervision.
+
+Runnable directly for small models:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --steps 20 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell, get_config, reduced
+from repro.models import build
+from repro.optim import adamw
+from repro.runtime.activations import activation_policy
+from repro.runtime.sharding import batch_shardings, opt_state_shardings, param_shardings
+
+
+def make_train_step(
+    api,
+    *,
+    microbatches: int = 1,
+    lr_schedule=None,
+    remat: bool = True,
+    grad_accum_dtype=jnp.bfloat16,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is split into ``microbatches``
+    along the batch dim; the global batch — and therefore the semantics of
+    the step — is unchanged.  Accumulation (and hence the per-microbatch
+    gradient reduce-scatter payload) runs in ``grad_accum_dtype``; bf16
+    halves the cross-device gradient traffic vs f32 (§Perf iteration), and
+    per-microbatch rounding noise is well below the gradient-noise floor
+    at batch 256.
+    """
+    if lr_schedule is None:
+        lr_schedule = lambda step: 3e-4  # noqa: E731
+
+    def loss_with_remat(params, mb):
+        return api.loss_fn(params, mb, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_with_remat)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_sum, gacc = carry
+                loss, grads = jax.value_and_grad(loss_with_remat)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + (g / microbatches).astype(grad_accum_dtype),
+                    gacc,
+                    grads,
+                )
+                return (loss_sum + loss / microbatches, gacc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.zeros((), jnp.float32), g0), mbs)
+        lr = lr_schedule(opt_state.step)
+        params, opt_state, metrics = adamw.apply(grads, opt_state, params, lr)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def shard_train_fn(train_step, mesh, params, opt_state, batch_spec):
+    """jit the step with explicit in/out shardings on ``mesh``."""
+    p_sh = param_shardings(mesh, params)
+    o_sh = opt_state_shardings(mesh, opt_state, p_sh)
+    b_sh = batch_shardings(mesh, batch_spec)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    m_sh = {"grad_norm": NamedSharding(mesh, P()), "loss": NamedSharding(mesh, P())}
+    return jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--qat", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    api = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key)
+    opt_state = adamw.init(params)
+    from repro.checkpoint import Checkpointer
+    from repro.data import DataConfig, make_batch
+    from repro.runtime.fault import Supervisor
+
+    dcfg = DataConfig(vocab=max(cfg.vocab, 2), global_batch=args.batch, seq_len=args.seq)
+    cell = ShapeCell("cli", args.seq, args.batch, "train")
+    sched = functools.partial(
+        adamw.cosine_schedule, peak_lr=3e-4, warmup=10, total=max(args.steps, 20)
+    )
+    train_step = jax.jit(make_train_step(api, microbatches=args.microbatches, lr_schedule=sched))
+
+    ck = Checkpointer(args.ckpt_dir)
+    sup = Supervisor(ck, save_every=args.save_every)
+
+    def step_fn(state, batch):
+        params, opt_state = state
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        return (params, opt_state), metrics
+
+    def batch_fn(step):
+        return make_batch(cfg, cell, dcfg, step)
+
+    t0 = time.time()
+    (params, opt_state), history = sup.run(step_fn, (params, opt_state), batch_fn, 0, args.steps)
+    dt = time.time() - t0
+    losses = [float(m["loss"]) for _, m in history]
+    print(f"steps={len(history)} time={dt:.1f}s loss[0]={losses[0]:.4f} loss[-1]={losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: composable definitions for all assigned architectures."""
+
+from repro.models.model_zoo import ModelApi, build, input_specs, synthesize_batch  # noqa: F401

@@ -1,0 +1,344 @@
+"""Encoder-decoder (seamless-m4t style): audio-stub encoder + text decoder.
+
+Float path for training; w8a8 integer path for serving (the encoder is
+exactly ITA's native case — bidirectional attention — and the decoder adds
+causal self-attention with an int8 KV cache plus cross-attention whose K/V
+are computed once from the encoder output).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.attention import (
+    MhaQParams,
+    attention_decode_i8,
+    attention_f32,
+    attention_flash_i8,
+)
+from repro.models import layers as L
+from repro.models.transformer import _merge_heads, _split_heads
+
+_S_GAMMA = 1.0 / 64.0
+
+
+def _init_attn(cfg, key, dtype, cross=False):
+    qkv_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+    ks = jax.random.split(key, 3)
+    if cross:
+        return {
+            "wq": L.init_linear(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, False, dtype),
+            "wkv": L.init_linear(ks[1], cfg.d_model, 2 * cfg.n_kv_heads * cfg.head_dim, False, dtype),
+            "wo": L.init_linear(ks[2], cfg.n_heads * cfg.head_dim, cfg.d_model, False, dtype),
+        }
+    return {
+        "wqkv": L.init_linear(ks[0], cfg.d_model, qkv_dim, False, dtype),
+        "wo": L.init_linear(ks[1], cfg.n_heads * cfg.head_dim, cfg.d_model, False, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "norm1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": _init_attn(cfg, kk[0], dtype),
+            "norm2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.init_mlp(kk[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        }
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "self_attn": _init_attn(cfg, kk[0], dtype),
+            "norm_x": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": _init_attn(cfg, kk[1], dtype, cross=True),
+            "norm2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.init_mlp(kk[2], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        }
+
+    return {
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[0], cfg.enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[1], cfg.dec_layers)),
+        "enc_pos": jax.random.normal(ks[2], (cfg.n_frames, cfg.d_model), dtype) * 0.02,
+        "dec_embed": {"table": jax.random.normal(ks[3], (cfg.vocab_padded, cfg.d_model), dtype) * 0.02},
+        "dec_pos": jax.random.normal(ks[4], (cfg.max_seq, cfg.d_model), dtype) * 0.02,
+        "enc_final": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "dec_final": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "lm_head": L.init_linear(ks[5], cfg.d_model, cfg.vocab_padded, False, dtype),
+    }
+
+
+def _attn_f32(cfg, ap, x, kv_src, causal):
+    if "wqkv" in ap:
+        q, k, v = _split_heads(L.linear(ap["wqkv"], x), cfg)
+    else:
+        b, s, _ = x.shape
+        q = L.linear(ap["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        kv = L.linear(ap["wkv"], kv_src)
+        sk = kv_src.shape[1]
+        k, v = jnp.split(kv, 2, axis=-1)
+        k = k.reshape(b, sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = v.reshape(b, sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = attention_f32(q, k, v, causal=causal)
+    return L.linear(ap["wo"], _merge_heads(out))
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jnp.ndarray, *, remat: bool = False) -> jnp.ndarray:
+    from repro.runtime.activations import constrain
+
+    x = frames + params["enc_pos"][: frames.shape[1]].astype(frames.dtype)
+
+    def body(x, lp):
+        x = constrain(x, "residual")
+        h = L.norm_apply(cfg.norm, lp["norm1"], x)
+        x = x + _attn_f32(cfg, lp["attn"], h, h, causal=False)
+        h = L.norm_apply(cfg.norm, lp["norm2"], x)
+        x = x + L.mlp_forward(lp["mlp"], h, cfg.mlp)
+        return constrain(x, "residual"), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(cfg.norm, params["enc_final"], x)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    """batch: frames [B,T,D], tokens [B,S]. Returns decoder logits."""
+    from repro.runtime.activations import constrain
+
+    memory = encode(cfg, params, batch["frames"], remat=remat)
+    tokens = batch["tokens"]
+    x = params["dec_embed"]["table"][tokens] + params["dec_pos"][: tokens.shape[1]].astype(
+        memory.dtype
+    )
+
+    def body(x, lp):
+        x = constrain(x, "residual")
+        h = L.norm_apply(cfg.norm, lp["norm1"], x)
+        x = x + _attn_f32(cfg, lp["self_attn"], h, h, causal=True)
+        h = L.norm_apply(cfg.norm, lp["norm_x"], x)
+        x = x + _attn_f32(cfg, lp["cross_attn"], h, memory, causal=False)
+        h = L.norm_apply(cfg.norm, lp["norm2"], x)
+        x = x + L.mlp_forward(lp["mlp"], h, cfg.mlp)
+        return constrain(x, "residual"), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.norm_apply(cfg.norm, params["dec_final"], x)
+    return x @ params["lm_head"]["w"]
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    logits = L.mask_padded_logits(forward(cfg, params, batch, remat=remat), cfg.vocab)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Integer serving path
+# ---------------------------------------------------------------------------
+
+def init_qparams(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    qkv_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+
+    def qnorm():
+        return {
+            "g_q": jnp.full((cfg.d_model,), 64, jnp.int8),
+            "beta_q": jnp.zeros((cfg.d_model,), jnp.int32),
+        }
+
+    def enc_layer(k):
+        kk = jax.random.split(k, 4)
+        return {
+            "norm1": qnorm(),
+            "attn": {
+                "wqkv": L.init_qlinear(kk[0], cfg.d_model, qkv_dim, False),
+                "wo": L.init_qlinear(kk[1], cfg.n_heads * cfg.head_dim, cfg.d_model, False),
+            },
+            "norm2": qnorm(),
+            "mlp": {
+                "up": L.init_qlinear(kk[2], cfg.d_model, cfg.d_ff, True),
+                "down": L.init_qlinear(kk[3], cfg.d_ff, cfg.d_model, True),
+            },
+        }
+
+    def dec_layer(k):
+        kk = jax.random.split(k, 6)
+        return {
+            "norm1": qnorm(),
+            "self_attn": {
+                "wqkv": L.init_qlinear(kk[0], cfg.d_model, qkv_dim, False),
+                "wo": L.init_qlinear(kk[1], cfg.n_heads * cfg.head_dim, cfg.d_model, False),
+            },
+            "norm_x": qnorm(),
+            "cross_attn": {
+                "wq": L.init_qlinear(kk[2], cfg.d_model, cfg.n_heads * cfg.head_dim, False),
+                "wkv": L.init_qlinear(kk[3], cfg.d_model, 2 * cfg.n_kv_heads * cfg.head_dim, False),
+                "wo": L.init_qlinear(kk[4], cfg.n_heads * cfg.head_dim, cfg.d_model, False),
+            },
+            "norm2": qnorm(),
+            "mlp": {
+                "up": L.init_qlinear(kk[5], cfg.d_model, cfg.d_ff, True),
+                "down": L.init_qlinear(kk[5], cfg.d_ff, cfg.d_model, True),
+            },
+        }
+
+    return {
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[0], cfg.enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[1], cfg.dec_layers)),
+        "enc_pos_q": jax.random.randint(ks[2], (cfg.n_frames, cfg.d_model), -64, 64, jnp.int8),
+        "dec_embed": {"table_q": jax.random.randint(ks[3], (cfg.vocab_padded, cfg.d_model), -127, 128, jnp.int8)},
+        "dec_pos_q": jax.random.randint(ks[4], (cfg.max_seq, cfg.d_model), -64, 64, jnp.int8),
+        "enc_final": qnorm(),
+        "dec_final": qnorm(),
+        "lm_head": L.init_qlinear(ks[5], cfg.d_model, cfg.vocab_padded, False),
+    }
+
+
+def _qattn(cfg, ap, h_q, kv_q, q: L.QuantConfig, causal, block_k=512):
+    st = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+    p = MhaQParams.make_flash(q.s_act, q.s_act, q.s_act, q.s_act, cfg.head_dim)
+    if "wqkv" in ap:
+        qh, kh, vh = _split_heads(L.qlinear(ap["wqkv"], h_q, st), cfg)
+    else:
+        b, s, _ = h_q.shape
+        qh = L.qlinear(ap["wq"], h_q, st).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        kv = L.qlinear(ap["wkv"], kv_q, st)
+        sk = kv_q.shape[1]
+        kh, vh = jnp.split(kv, 2, axis=-1)
+        kh = kh.reshape(b, sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        vh = vh.reshape(b, sk, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = attention_flash_i8(qh, kh, vh, p, causal=causal, block_k=min(block_k, kh.shape[2]))
+    return L.qlinear(ap["wo"], _merge_heads(out), st)
+
+
+def encode_w8a8(cfg: ArchConfig, qp: dict, frames_q: jnp.ndarray, q: L.QuantConfig):
+    add = L.make_iadd_params(q.s_res, q.s_res, q.s_res)
+    x_q = L.iadd_i8(frames_q.astype(jnp.int8), qp["enc_pos_q"][None, : frames_q.shape[1]], *add)
+    res = L.make_iadd_params(q.s_res, q.s_act, q.s_res)
+
+    def body(x, lp):
+        h = L.norm_apply_i8(cfg.norm, lp["norm1"], x, _S_GAMMA, q.s_act)
+        x = L.iadd_i8(x, _qattn(cfg, lp["attn"], h, h, q, causal=False), *res)
+        h = L.norm_apply_i8(cfg.norm, lp["norm2"], x, _S_GAMMA, q.s_act)
+        pre = L.qlinear(lp["mlp"]["up"], h, L.QLinearSite(q.s_act, q.s_w, q.s_act, act=2, s_preact=q.s_act))
+        m = L.qlinear(lp["mlp"]["down"], pre, L.QLinearSite(q.s_act, q.s_w, q.s_act))
+        x = L.iadd_i8(x, m, *res)
+        return x, None
+
+    x_q, _ = jax.lax.scan(body, x_q, qp["enc_layers"])
+    return L.norm_apply_i8(cfg.norm, qp["enc_final"], x_q, _S_GAMMA, q.s_res)
+
+
+def init_cache_w8a8(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.dec_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    cross = (cfg.dec_layers, batch, cfg.n_kv_heads, cfg.n_frames, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, jnp.int8),
+        "v": jnp.zeros(shape, jnp.int8),
+        "ck": jnp.zeros(cross, jnp.int8),
+        "cv": jnp.zeros(cross, jnp.int8),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_w8a8(
+    cfg: ArchConfig, qp: dict, batch: dict, max_len: int, q: L.QuantConfig = L.QuantConfig(),
+    block_k: int = 512,
+):
+    """Encode frames; run the decoder over the prompt; build both caches."""
+    memory_q = encode_w8a8(cfg, qp, batch["frames"], q)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    add = L.make_iadd_params(q.s_res, q.s_res, q.s_res)
+    x_q = L.iadd_i8(qp["dec_embed"]["table_q"][tokens], qp["dec_pos_q"][None, :s], *add)
+    res = L.make_iadd_params(q.s_res, q.s_act, q.s_res)
+    st = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+    p = MhaQParams.make_flash(q.s_act, q.s_act, q.s_act, q.s_act, cfg.head_dim)
+
+    def body(x, lp):
+        h = L.norm_apply_i8(cfg.norm, lp["norm1"], x, _S_GAMMA, q.s_act)
+        qh, kh, vh = _split_heads(L.qlinear(lp["self_attn"]["wqkv"], h, st), cfg)
+        out = attention_flash_i8(qh, kh, vh, p, causal=True, block_k=min(block_k, s))
+        x = L.iadd_i8(x, L.qlinear(lp["self_attn"]["wo"], _merge_heads(out), st), *res)
+        # cross attention; compute and keep cross K/V
+        h = L.norm_apply_i8(cfg.norm, lp["norm_x"], x, _S_GAMMA, q.s_act)
+        bq = L.qlinear(lp["cross_attn"]["wq"], h, st)
+        qh2 = bq.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        kv = L.qlinear(lp["cross_attn"]["wkv"], memory_q, st)
+        t = memory_q.shape[1]
+        ck, cv = jnp.split(kv, 2, axis=-1)
+        ck = ck.reshape(b, t, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        cv = cv.reshape(b, t, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        out = attention_flash_i8(qh2, ck, cv, p, causal=False, block_k=min(block_k, t))
+        x = L.iadd_i8(x, L.qlinear(lp["cross_attn"]["wo"], _merge_heads(out), st), *res)
+        h = L.norm_apply_i8(cfg.norm, lp["norm2"], x, _S_GAMMA, q.s_act)
+        pre = L.qlinear(lp["mlp"]["up"], h, L.QLinearSite(q.s_act, q.s_w, q.s_act, act=2, s_preact=q.s_act))
+        m = L.qlinear(lp["mlp"]["down"], pre, L.QLinearSite(q.s_act, q.s_w, q.s_act))
+        x = L.iadd_i8(x, m, *res)
+        return x, (kh, vh, ck, cv)
+
+    x_q, (ks_, vs_, cks, cvs) = jax.lax.scan(body, x_q, qp["dec_layers"])
+    cache = init_cache_w8a8(cfg, b, max_len)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks_, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs_, (0, 0, 0, 0, 0))
+    cache["ck"], cache["cv"] = cks, cvs
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    h = L.norm_apply_i8(cfg.norm, qp["dec_final"], x_q[:, -1:], _S_GAMMA, q.s_act)
+    logits = jnp.matmul(h, qp["lm_head"]["w_q"], preferred_element_type=jnp.int32)
+    return logits.astype(jnp.float32) * (q.s_act * q.s_w), cache
+
+
+def decode_step_w8a8(
+    cfg: ArchConfig, qp: dict, cache: dict, token: jnp.ndarray,
+    q: L.QuantConfig = L.QuantConfig(), block_k: int = 2048,
+):
+    pos = cache["len"]
+    b = token.shape[0]
+    add = L.make_iadd_params(q.s_res, q.s_res, q.s_res)
+    pos_emb = jax.lax.dynamic_slice_in_dim(qp["dec_pos_q"], pos, 1, 0)
+    x_q = L.iadd_i8(qp["dec_embed"]["table_q"][token], pos_emb[None], *add)
+    res = L.make_iadd_params(q.s_res, q.s_act, q.s_res)
+    st = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+    p = MhaQParams.make_flash(q.s_act, q.s_act, q.s_act, q.s_act, cfg.head_dim)
+
+    def body(x, xs):
+        lp, kc, vc, ck, cv = xs
+        h = L.norm_apply_i8(cfg.norm, lp["norm1"], x, _S_GAMMA, q.s_act)
+        qh, kh, vh = _split_heads(L.qlinear(lp["self_attn"]["wqkv"], h, st), cfg)
+        kc = jax.lax.dynamic_update_slice(kc, kh, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vh, (0, 0, pos, 0))
+        out = attention_decode_i8(
+            qh, kc, vc, jnp.full((b,), pos + 1, jnp.int32), p, block_k=min(block_k, kc.shape[2])
+        )
+        x = L.iadd_i8(x, L.qlinear(lp["self_attn"]["wo"], _merge_heads(out), st), *res)
+        h = L.norm_apply_i8(cfg.norm, lp["norm_x"], x, _S_GAMMA, q.s_act)
+        qh2 = (
+            L.qlinear(lp["cross_attn"]["wq"], h, st)
+            .reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+        )
+        out = attention_flash_i8(qh2, ck, cv, p, causal=False, block_k=min(block_k, ck.shape[2]))
+        x = L.iadd_i8(x, L.qlinear(lp["cross_attn"]["wo"], _merge_heads(out), st), *res)
+        h = L.norm_apply_i8(cfg.norm, lp["norm2"], x, _S_GAMMA, q.s_act)
+        pre = L.qlinear(lp["mlp"]["up"], h, L.QLinearSite(q.s_act, q.s_w, q.s_act, act=2, s_preact=q.s_act))
+        m = L.qlinear(lp["mlp"]["down"], pre, L.QLinearSite(q.s_act, q.s_w, q.s_act))
+        x = L.iadd_i8(x, m, *res)
+        return x, (kc, vc)
+
+    x_q, (ks_, vs_) = jax.lax.scan(
+        body, x_q, (qp["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    new_cache = dict(cache, k=ks_, v=vs_, len=cache["len"] + 1)
+    h = L.norm_apply_i8(cfg.norm, qp["dec_final"], x_q, _S_GAMMA, q.s_act)
+    logits = jnp.matmul(h, qp["lm_head"]["w_q"], preferred_element_type=jnp.int32)
+    return logits.astype(jnp.float32) * (q.s_act * q.s_w), new_cache

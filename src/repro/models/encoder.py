@@ -1,0 +1,269 @@
+"""Encoder-only models — the paper's three workloads.
+
+MobileBERT (tokens), DINOv2-S (patch embeddings) and the Whisper-tiny
+encoder (frame embeddings).  Float, w8a8 (XLA integer) and ``ita``
+(Pallas kernels) backends; plus the **paper-faithful head-by-head
+schedule** (``cfg.ita_head_by_head``): ITA is a single-head datapath, so
+Deeploy splits MHA per head and computes the partial output projection
+per head, with the head accumulation running on the cluster cores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.attention import MhaQParams, attention_f32, attention_rowwise_i8
+from repro.core.quant_linear import ACT_GELU
+from repro.models import layers as L
+from repro.models.transformer import _merge_heads, _split_heads
+from repro.quant.qparams import make_qparams, requantize
+
+_S_GAMMA = 1.0 / 64.0
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    qkv_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+
+    def init_layer(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "norm1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": {
+                "wqkv": L.init_linear(kk[0], cfg.d_model, qkv_dim, True, dtype),
+                "wo": L.init_linear(kk[1], cfg.n_heads * cfg.head_dim, cfg.d_model, True, dtype),
+            },
+            "norm2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.init_mlp(kk[2], cfg.d_model, cfg.d_ff, "gelu", dtype),
+        }
+
+    layers = jax.vmap(init_layer)(jax.random.split(ks[0], cfg.n_layers))
+    seq = cfg.max_seq
+    params = {
+        "layers": layers,
+        "pos": jax.random.normal(ks[1], (seq, cfg.d_model), dtype) * 0.02,
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.vocab:
+        params["embed"] = {"table": jax.random.normal(ks[2], (cfg.vocab, cfg.d_model), dtype) * 0.02}
+    return params
+
+
+def embed(cfg: ArchConfig, params: dict, batch: dict) -> jnp.ndarray:
+    if "tokens" in batch and cfg.vocab:
+        x = params["embed"]["table"][batch["tokens"]]
+    elif "patches" in batch:
+        x = batch["patches"]
+    else:
+        x = batch["frames"]
+    s = x.shape[1]
+    return x + params["pos"][:s].astype(x.dtype)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, qat: bool = False) -> jnp.ndarray:
+    """Returns hidden states [B, S, D] (and MLM logits if vocab & tokens)."""
+    from repro.models.transformer import layer_fwd
+
+    x = embed(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        x, _ = layer_fwd(cfg, lp, x, positions, qat=qat, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(cfg.norm, params["final_norm"], x)
+    if cfg.vocab and "tokens" in batch:
+        return x @ params["embed"]["table"].T  # tied MLM head
+    return x
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, **kw) -> jnp.ndarray:
+    out = forward(cfg, params, batch, **kw)
+    if cfg.vocab and "tokens" in batch:
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+        return nll.mean()
+    # feature objective for patch/frame encoders (smoke/train proxy)
+    return jnp.mean((out - batch.get("targets", 0.0)) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Integer path (w8a8 / ita backends; rowwise ITAMax like the ASIC)
+# ---------------------------------------------------------------------------
+
+def quantize_params(cfg: ArchConfig, params: dict, q: L.QuantConfig = L.QuantConfig()) -> dict:
+    from repro.models.transformer import quantize_params as _tq  # reuse norm/linear rules
+
+    def quant_w(w):
+        return jnp.clip(jnp.rint(w / q.s_w), -127, 127).astype(jnp.int8)
+
+    def quant_linear(p, s_in):
+        out = {"w_q": quant_w(p["w"])}
+        if "b" in p:
+            out["b_q"] = jnp.asarray(jnp.rint(p["b"] / (s_in * q.s_w)), jnp.int32)
+        return out
+
+    def quant_norm(p):
+        if not p:
+            return {}
+        out = {"g_q": jnp.clip(jnp.rint(p["g"] / _S_GAMMA), -127, 127).astype(jnp.int8)}
+        if "b" in p:
+            from repro.core import ilayernorm as iln
+
+            out["beta_q"] = jnp.asarray(jnp.rint(p["b"] / (iln.NORM_SCALE * _S_GAMMA)), jnp.int32)
+        return out
+
+    def quant_layer(lp):
+        return {
+            "norm1": quant_norm(lp["norm1"]),
+            "attn": {
+                "wqkv": quant_linear(lp["attn"]["wqkv"], q.s_act),
+                "wo": quant_linear(lp["attn"]["wo"], q.s_act),
+            },
+            "norm2": quant_norm(lp["norm2"]),
+            "mlp": {k: quant_linear(v, q.s_act) for k, v in lp["mlp"].items()},
+        }
+
+    qp = {
+        "layers": jax.vmap(quant_layer)(params["layers"]),
+        "pos_q": jnp.clip(jnp.rint(params["pos"] / q.s_res), -127, 127).astype(jnp.int8),
+        "final_norm": quant_norm(params["final_norm"]),
+    }
+    if cfg.vocab:
+        qp["embed"] = {
+            "table_q": jnp.clip(jnp.rint(params["embed"]["table"] / q.s_res), -127, 127).astype(jnp.int8)
+        }
+    return qp
+
+
+def _attention_i8(cfg, qh, kh, vh, p: MhaQParams, backend: str, s_act: float):
+    if backend == "ita":
+        from repro.kernels import ita_attention
+
+        # Pallas kernel path needs 128-aligned tiles; the deploy planner
+        # guarantees this for accelerated ops — pad here for odd encoders.
+        sq = qh.shape[2]
+        pad = (-sq) % 128
+        if pad:
+            qh = jnp.pad(qh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = ita_attention(
+            qh, kh, vh, s_q=s_act, s_k=s_act, s_v=s_act, s_out=s_act,
+            block_q=128, block_k=128, kv_valid=sq if pad else None,
+        )
+        return out[:, :, :sq] if pad else out
+    return attention_rowwise_i8(qh, kh, vh, p)
+
+
+def qlayer_fwd_encoder(
+    cfg: ArchConfig,
+    lp: dict,
+    x_q: jnp.ndarray,
+    q: L.QuantConfig,
+    backend: str = "w8a8",
+):
+    """One integer encoder layer (bidirectional, rowwise ITAMax like ITA)."""
+    st_qkv = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+    st_o = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+    p_mha = MhaQParams.make(q.s_act, q.s_act, q.s_act, q.s_act, cfg.head_dim)
+    res = L.make_iadd_params(q.s_res, q.s_act, q.s_res)
+
+    h_q = L.norm_apply_i8(cfg.norm, lp["norm1"], x_q, _S_GAMMA, q.s_act)
+    qkv = L.qlinear(lp["attn"]["wqkv"], h_q, st_qkv)
+    qh, kh, vh = _split_heads(qkv, cfg)
+
+    if cfg.ita_head_by_head:
+        # Paper-faithful ITA schedule: single-head attention + per-head
+        # partial output projection; head accumulation on the cluster.
+        hdim = cfg.head_dim
+        group = cfg.n_heads // cfg.n_kv_heads
+        wo = lp["attn"]["wo"]["w_q"]  # [H*hd, D]
+        acc = jnp.zeros((*x_q.shape[:2], cfg.d_model), jnp.int32)
+        for head in range(cfg.n_heads):
+            kvh = head // group
+            a1 = attention_rowwise_i8(
+                qh[:, head : head + 1], kh[:, kvh : kvh + 1], vh[:, kvh : kvh + 1], p_mha
+            )  # int8 [B,1,S,hd]
+            wo_h = jax.lax.dynamic_slice_in_dim(wo, head * hdim, hdim, 0)
+            part = jnp.matmul(a1[:, 0], wo_h, preferred_element_type=jnp.int32)
+            acc = acc + part  # cluster head accumulation (int32)
+        qp_o = make_qparams(q.s_act, q.s_w, q.s_act)
+        out = requantize(acc, qp_o.mult, qp_o.shift)
+        if "b_q" in lp["attn"]["wo"]:
+            out = requantize(
+                jnp.asarray(out, jnp.int32)
+                + requantize(lp["attn"]["wo"]["b_q"], qp_o.mult, qp_o.shift),
+                make_qparams(q.s_act, 1.0, q.s_act).mult,
+                make_qparams(q.s_act, 1.0, q.s_act).shift,
+            )
+    else:
+        a = _attention_i8(cfg, qh, kh, vh, p_mha, backend, q.s_act)
+        out = L.qlinear(lp["attn"]["wo"], _merge_heads(a), st_o)
+    x_q = L.iadd_i8(x_q, out, *res)
+
+    h_q = L.norm_apply_i8(cfg.norm, lp["norm2"], x_q, _S_GAMMA, q.s_act)
+    if backend == "ita":
+        from repro.kernels import int8_gemm
+
+        d_up = lp["mlp"]["up"]["w_q"].shape[1]
+        pre = int8_gemm(
+            h_q.reshape(-1, cfg.d_model), lp["mlp"]["up"]["w_q"], lp["mlp"]["up"].get("b_q"),
+            s_in=q.s_act, s_w=q.s_w, s_out=q.s_act, act=ACT_GELU, s_preact=q.s_act,
+            block_m=128, block_n=128, block_k=128,
+        ).reshape(*h_q.shape[:2], d_up)
+        m = int8_gemm(
+            pre.reshape(-1, d_up), lp["mlp"]["down"]["w_q"], lp["mlp"]["down"].get("b_q"),
+            s_in=q.s_act, s_w=q.s_w, s_out=q.s_act,
+            block_m=128, block_n=128, block_k=128,
+        ).reshape(*h_q.shape[:2], cfg.d_model)
+    else:
+        pre = L.qlinear(
+            lp["mlp"]["up"], h_q,
+            L.QLinearSite(q.s_act, q.s_w, q.s_act, act=ACT_GELU, s_preact=q.s_act),
+        )
+        m = L.qlinear(lp["mlp"]["down"], pre, L.QLinearSite(q.s_act, q.s_w, q.s_act))
+    return L.iadd_i8(x_q, m, *res)
+
+
+def forward_w8a8(
+    cfg: ArchConfig,
+    qp: dict,
+    batch: dict,
+    q: L.QuantConfig = L.QuantConfig(),
+    backend: str = "w8a8",
+):
+    if "tokens" in batch and cfg.vocab:
+        x_q = qp["embed"]["table_q"][batch["tokens"]]
+    elif "patches" in batch:
+        x_q = batch["patches"].astype(jnp.int8)
+    else:
+        x_q = batch["frames"].astype(jnp.int8)
+    s = x_q.shape[1]
+    add = L.make_iadd_params(q.s_res, q.s_res, q.s_res)
+    x_q = L.iadd_i8(x_q, qp["pos_q"][None, :s], *add)
+
+    if backend == "ita" or cfg.ita_head_by_head:
+        # python loop over layers (per-layer PTQ scales / kernel calls)
+        n = jax.tree_util.tree_leaves(qp["layers"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], qp["layers"])
+            x_q = qlayer_fwd_encoder(cfg, lp, x_q, q, backend)
+    else:
+        def body(x, lp):
+            return qlayer_fwd_encoder(cfg, lp, x, q, backend), None
+
+        x_q, _ = jax.lax.scan(body, x_q, qp["layers"])
+
+    h_q = L.norm_apply_i8(cfg.norm, qp["final_norm"], x_q, _S_GAMMA, q.s_act)
+    if cfg.vocab and "tokens" in batch:
+        acc = jnp.matmul(h_q, qp["embed"]["table_q"].T, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (q.s_act * q.s_res)
+    return h_q.astype(jnp.float32) * q.s_act

@@ -1,0 +1,260 @@
+"""Mamba2 (SSD — state-space duality) blocks and LM, float path.
+
+The paper's attention technique is inapplicable to the attention-free SSD
+scan (DESIGN.md §Arch-applicability); projections remain quantizable
+GEMMs, the scan itself runs on the general ("cluster") float path.
+
+Chunked SSD: within-chunk quadratic form + inter-chunk state recurrence
+(lax.scan over chunks).  Decode is the O(1) recurrent step on the carried
+(heads, head_dim, state) tensor — the reason ``long_500k`` is runnable for
+this family at all.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+D_CONV = 4  # depthwise causal conv width (Mamba default)
+N_GROUPS = 1
+
+
+def dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * N_GROUPS * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_block(cfg: ArchConfig, key, dtype) -> dict:
+    d_inner, n_heads, conv_dim = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * N_GROUPS * cfg.ssm_state + n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.init_norm("rmsnorm", cfg.d_model, dtype),
+        "in_proj": L.init_linear(ks[0], cfg.d_model, d_in_proj, False, dtype),
+        "conv_w": jax.random.normal(ks[1], (D_CONV, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "out_norm": L.init_norm("rmsnorm", d_inner, dtype),
+        "out_proj": L.init_linear(ks[2], d_inner, cfg.d_model, False, dtype),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a [..., c] -> lower-triangular pairwise sums: out[i,j] = sum_{j<k<=i} a_k."""
+    c = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state=None):
+    """Depthwise causal conv, width D_CONV. x [B,S,C], w [D_CONV,C].
+
+    ``state`` [B, D_CONV-1, C] holds the trailing context (decode); returns
+    (y, new_state).
+    """
+    if state is None:
+        pad = jnp.zeros((x.shape[0], D_CONV - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(D_CONV)) + b
+    new_state = xp[:, -(D_CONV - 1) :]
+    return y, new_state
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, l, h, p)  (already multiplied by dt)
+    dta: jnp.ndarray,  # (b, l, h)  log-decay per step (negative)
+    Bm: jnp.ndarray,  # (b, l, n)
+    Cm: jnp.ndarray,  # (b, l, n)
+    chunk: int,
+    init_state=None,  # (b, h, p, n)
+):
+    """Chunked SSD. Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = dta.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    cum = jnp.cumsum(ac, axis=2)  # (b,nc,c,h)
+    # intra-chunk (diag) term.  NOTE (§Perf, refuted iteration): forcing a
+    # head-sharding constraint on Ld (b,nc,h,c,c) was tried and REVERTED —
+    # GSPMD already shards it via the einsum operands, and the explicit
+    # constraint only inserted +75 % resharding collectives.
+    seg = _segsum(jnp.moveaxis(ac, -1, -2))  # (b,nc,h,c,c)
+    Ld = jnp.exp(seg)
+    y_diag = jnp.einsum("bzin,bzjn,bzhij,bzjhp->bzihp", Cc, Bc, Ld, xc)
+
+    # per-chunk end states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,c,h)
+    s_chunk = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn", Bc, decay_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+    s0 = jnp.zeros((b, h, p, n), x.dtype) if init_state is None else init_state
+
+    def step(s, inp):
+        s_z, dec = inp  # (b,h,p,n), (b,h)
+        s_in = s
+        s_out = s * dec[:, :, None, None] + s_z
+        return s_out, s_in
+
+    s_final, s_ins = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_ins = jnp.moveaxis(s_ins, 0, 1)  # (b,nc,h,p,n) state entering each chunk
+    y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp", Cc, jnp.exp(cum), s_ins)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, s_final
+
+
+def block_forward(cfg: ArchConfig, bp: dict, u: jnp.ndarray, conv_state=None, ssm_state=None):
+    """One Mamba2 block. u [B,S,D]. Returns (out, conv_state, ssm_state)."""
+    d_inner, n_heads, conv_dim = dims(cfg)
+    resid = u
+    h = L.norm_apply("rmsnorm", bp["norm"], u)
+    zxbcdt = L.linear(bp["in_proj"], h)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, new_conv = _conv1d_causal(xbc, bp["conv_w"], bp["conv_b"], conv_state)
+    xbc = L.silu(xbc)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N_GROUPS * cfg.ssm_state], axis=-1)
+    b, s, _ = x.shape
+    x = x.reshape(b, s, n_heads, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw + bp["dt_bias"])  # (b,s,h)
+    a = -jnp.exp(bp["A_log"])  # (h,)
+    dta = dt * a  # (b,s,h) log decay
+    # pad to a chunk multiple: zero-decay/zero-input steps are state-neutral
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    xd = x * dt[..., None]
+    if pad:
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dta_p = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        dta_p, Bm_p, Cm_p = dta, Bm, Cm
+    y, new_ssm = ssd_chunked(xd, dta_p, Bm_p, Cm_p, chunk, ssm_state)
+    y = y[:, :s]
+    y = y + bp["D"][None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = L.norm_apply("rmsnorm", bp["out_norm"], y * L.silu(z))
+    return resid + L.linear(bp["out_proj"], y), new_conv, new_ssm
+
+
+def block_decode(cfg: ArchConfig, bp: dict, u: jnp.ndarray, conv_state, ssm_state):
+    """O(1) recurrent step. u [B,1,D]."""
+    d_inner, n_heads, conv_dim = dims(cfg)
+    resid = u
+    h = L.norm_apply("rmsnorm", bp["norm"], u)
+    zxbcdt = L.linear(bp["in_proj"], h)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, new_conv = _conv1d_causal(xbc, bp["conv_w"], bp["conv_b"], conv_state)
+    xbc = L.silu(xbc)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N_GROUPS * cfg.ssm_state], axis=-1)
+    b = x.shape[0]
+    x = x.reshape(b, n_heads, cfg.ssm_head_dim)  # single step
+    dt = jax.nn.softplus(dt_raw[:, 0] + bp["dt_bias"])  # (b,h)
+    a = -jnp.exp(bp["A_log"])
+    decay = jnp.exp(dt * a)  # (b,h)
+    # state update: S = S*decay + dt * x ⊗ B
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, x, Bm[:, 0])
+    new_ssm = ssm_state * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm[:, 0]) + bp["D"][None, :, None] * x
+    y = y.reshape(b, 1, d_inner)
+    y = L.norm_apply("rmsnorm", bp["out_norm"], y * L.silu(z))
+    return resid + L.linear(bp["out_proj"], y), new_conv, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(cfg, k, dtype))(layer_keys)
+    return {
+        "embed": {"table": jax.random.normal(ks[1], (cfg.vocab_padded, cfg.d_model), dtype) * 0.02},
+        "layers": layers,
+        "final_norm": L.init_norm("rmsnorm", cfg.d_model, dtype),
+        "lm_head": L.init_linear(ks[2], cfg.d_model, cfg.vocab_padded, False, dtype),
+    }
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    from repro.runtime.activations import constrain
+
+    x = params["embed"]["table"][batch["tokens"]]
+
+    def body(x, bp):
+        x = constrain(x, "residual")
+        x, _, _ = block_forward(cfg, bp, x)
+        return constrain(x, "residual"), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply("rmsnorm", params["final_norm"], x)
+    return x @ params["lm_head"]["w"]
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    logits = L.mask_padded_logits(forward(cfg, params, batch, remat=remat), cfg.vocab)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, n_heads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, D_CONV - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int = 0):
+    x = params["embed"]["table"][batch["tokens"]]
+
+    def body(x, bp):
+        x, conv, ssm = block_forward(cfg, bp, x)
+        return x, (conv, ssm)
+
+    x, (convs, ssms) = jax.lax.scan(body, x, params["layers"])
+    cache = {"conv": convs, "ssm": ssms, "len": jnp.asarray(x.shape[1], jnp.int32)}
+    x = L.norm_apply("rmsnorm", params["final_norm"], x[:, -1:])
+    return x @ params["lm_head"]["w"], cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jnp.ndarray):
+    x = params["embed"]["table"][token]
+
+    def body(x, xs):
+        bp, conv, ssm = xs
+        x, conv, ssm = block_decode(cfg, bp, x, conv, ssm)
+        return x, (conv, ssm)
+
+    x, (convs, ssms) = jax.lax.scan(body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    new_cache = {"conv": convs, "ssm": ssms, "len": cache["len"] + 1}
+    x = L.norm_apply("rmsnorm", params["final_norm"], x)
+    return x @ params["lm_head"]["w"], new_cache

@@ -1,0 +1,193 @@
+"""Unified model API: ``build(cfg)`` returns the per-family function set.
+
+Every architecture exposes the same surface so launchers, the dry-run and
+the benchmarks are arch-agnostic:
+
+  init_params(key, dtype)        float training params
+  loss_fn(params, batch)         scalar loss (causal CE / seq2seq CE / MLM)
+  forward(params, batch)         logits
+  init_serve_params(key)         serving-side params (int8 where the
+                                 technique applies; see DESIGN.md)
+  prefill(sparams, batch, max_len) -> (logits, cache)
+  decode_step(sparams, cache, token) -> (logits, cache)
+  input_specs(cell, batch_override=None)  ShapeDtypeStruct stand-ins
+
+Serve params per family:
+  dense/vlm/moe : fully int8 (w8a8)
+  encdec        : fully int8 (w8a8)
+  hybrid        : float trunk + int8 shared attention (+ int8 KV cache)
+  ssm           : float (technique inapplicable — documented)
+  encoder       : int8, no decode
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import encdec as ED
+from repro.models import encoder as EN
+from repro.models import mamba2 as MB
+from repro.models import transformer as T
+from repro.models import zamba2 as Z
+
+
+@dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init_params: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_serve_params: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache_shape: Callable  # (batch, max_len) -> eval_shape-able fn
+
+    def input_specs(self, cell: ShapeCell, dtype=jnp.bfloat16) -> dict:
+        return input_specs(self.cfg, cell, dtype)
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key, dtype=jnp.float32: T.init_params(cfg, key, dtype),
+            loss_fn=lambda p, b, **kw: T.loss_fn(cfg, p, b, **kw),
+            forward=lambda p, b, **kw: T.forward(cfg, p, b, **kw),
+            init_serve_params=lambda key: T.init_qparams(cfg, key),
+            prefill=lambda sp, b, max_len: T.prefill_w8a8(cfg, sp, b, max_len),
+            decode_step=lambda sp, c, t: T.decode_step_w8a8(cfg, sp, c, t),
+            init_cache_shape=lambda batch, max_len: (
+                lambda: T.init_cache_w8a8(cfg, batch, max_len)
+            ),
+        )
+    if fam == "ssm":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key, dtype=jnp.float32: MB.init_params(cfg, key, dtype),
+            loss_fn=lambda p, b, **kw: MB.loss_fn(cfg, p, b),
+            forward=lambda p, b, **kw: MB.forward(cfg, p, b),
+            init_serve_params=lambda key: MB.init_params(cfg, key, jnp.bfloat16),
+            prefill=lambda sp, b, max_len: MB.prefill(cfg, sp, b, max_len),
+            decode_step=lambda sp, c, t: MB.decode_step(cfg, sp, c, t),
+            init_cache_shape=lambda batch, max_len: (
+                lambda: MB.init_cache(cfg, batch, jnp.bfloat16)
+            ),
+        )
+    if fam == "hybrid":
+
+        def init_serve(key):
+            p = Z.init_params(cfg, key, jnp.bfloat16)
+            return {"params": p, "qshared": Z.quantize_shared(p["shared"])}
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key, dtype=jnp.float32: Z.init_params(cfg, key, dtype),
+            loss_fn=lambda p, b, **kw: Z.loss_fn(cfg, p, b),
+            forward=lambda p, b, **kw: Z.forward(cfg, p, b),
+            init_serve_params=init_serve,
+            prefill=lambda sp, b, max_len: Z.prefill(cfg, sp["params"], b, max_len, sp["qshared"]),
+            decode_step=lambda sp, c, t: Z.decode_step(cfg, sp["params"], c, t, sp["qshared"]),
+            init_cache_shape=lambda batch, max_len: (
+                lambda: Z.init_cache(cfg, batch, max_len, jnp.bfloat16)
+            ),
+        )
+    if fam == "encdec":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key, dtype=jnp.float32: ED.init_params(cfg, key, dtype),
+            loss_fn=lambda p, b, **kw: ED.loss_fn(cfg, p, b),
+            forward=lambda p, b, **kw: ED.forward(cfg, p, b),
+            init_serve_params=lambda key: ED.init_qparams(cfg, key),
+            prefill=lambda sp, b, max_len: ED.prefill_w8a8(cfg, sp, b, max_len),
+            decode_step=lambda sp, c, t: ED.decode_step_w8a8(cfg, sp, c, t),
+            init_cache_shape=lambda batch, max_len: (
+                lambda: ED.init_cache_w8a8(cfg, batch, max_len)
+            ),
+        )
+    if fam == "encoder":
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key, dtype=jnp.float32: EN.init_params(cfg, key, dtype),
+            loss_fn=lambda p, b, **kw: EN.loss_fn(cfg, p, b, **kw),
+            forward=lambda p, b, **kw: EN.forward(cfg, p, b, **kw),
+            init_serve_params=lambda key: None,  # built from float params via PTQ
+            prefill=None,
+            decode_step=None,
+            init_cache_shape=None,
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (deliverable (e): weak-type-correct, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def _tok_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   the loss_fn batch.
+    prefill: the prefill batch (prompt length = cell.seq_len).
+    decode:  {"token": [B,1]} — the KV cache is built separately via
+             ``init_cache_shape`` + ``jax.eval_shape``.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        batch = {"tokens": _tok_spec(b, s)}
+    elif fam == "vlm":
+        toks = max(s - cfg.n_patches, 1)
+        patch_dtype = jnp.int8 if cell.kind != "train" else dtype
+        batch = {
+            "tokens": _tok_spec(b, toks),
+            "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), patch_dtype),
+        }
+    elif fam in ("ssm", "hybrid"):
+        batch = {"tokens": _tok_spec(b, s)}
+    elif fam == "encdec":
+        frames = min(cfg.n_frames, max(s // 4, 16))
+        frame_dtype = jnp.int8 if cell.kind != "train" else dtype
+        batch = {
+            "frames": jax.ShapeDtypeStruct((b, frames, cfg.d_model), frame_dtype),
+            "tokens": _tok_spec(b, s),
+        }
+    elif fam == "encoder":
+        if cfg.vocab:
+            batch = {"tokens": _tok_spec(b, min(s, cfg.max_seq))}
+        elif cfg.n_patches:
+            batch = {"patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dtype)}
+        else:
+            batch = {"frames": jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), dtype)}
+    else:
+        raise ValueError(fam)
+
+    if cell.kind == "train":
+        lab = batch["tokens"].shape if "tokens" in batch else (b, s)
+        batch["labels"] = jax.ShapeDtypeStruct(lab, jnp.int32)
+    if cell.kind == "decode":
+        batch = {"token": _tok_spec(b, 1)}
+    return batch
+
+
+def synthesize_batch(cfg: ArchConfig, cell: ShapeCell, key, dtype=jnp.float32) -> dict:
+    """Concrete random batch matching ``input_specs`` (smoke tests, examples)."""
+    specs = input_specs(cfg, cell, dtype)
+    out = {}
+    for name, spec in specs.items():
+        if spec.dtype == jnp.int32:
+            hi = max(cfg.vocab, 2) if name in ("tokens", "labels", "token") else 2
+            out[name] = jax.random.randint(key, spec.shape, 0, hi, jnp.int32)
+        elif spec.dtype == jnp.int8:
+            out[name] = jax.random.randint(key, spec.shape, -127, 128, jnp.int8)
+        else:
+            out[name] = jax.random.normal(key, spec.shape, spec.dtype)
+    return out

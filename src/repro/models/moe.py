@@ -1,0 +1,202 @@
+"""Mixture-of-Experts FFN (GShard-style dispatch), float + w8a8 paths.
+
+Routing and combine run in float32 on the "cluster" path (the paper's
+auxiliary-op rule: data-dependent control flow isn't an ITA op); the
+expert GEMMs are int8 on the accelerated path in w8a8 mode.
+
+Dispatch uses the canonical capacity-based einsum (grouped to keep the
+dispatch cost linear in sequence length), with experts padded to a
+multiple of the model-parallel axis so EP sharding divides evenly
+(padded experts are masked to -inf in the router and receive no tokens).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.quant_linear import ACT_IDENTITY
+from repro.models import layers as L
+from repro.quant.qparams import make_qparams, requantize
+
+EP_PAD_TO = 16  # model-axis size of the production mesh
+DISPATCH_GROUP = 1024  # tokens per dispatch group
+
+
+def n_experts_padded(cfg: ArchConfig) -> int:
+    return int(math.ceil(cfg.n_experts / EP_PAD_TO) * EP_PAD_TO)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_moe_layer(cfg: ArchConfig, key, dtype) -> dict:
+    e = n_experts_padded(cfg)
+    d, f = cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), dtype) * 0.02},
+        "experts": {
+            "gate": jax.random.normal(ks[1], (e, d, f), dtype) / math.sqrt(d),
+            "up": jax.random.normal(ks[2], (e, d, f), dtype) / math.sqrt(d),
+            "down": jax.random.normal(ks[3], (e, f, d), dtype) / math.sqrt(f),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.d_ff_expert
+        p["shared"] = L.init_mlp(ks[4], d, fs, "swiglu", dtype)
+    return p
+
+
+def init_qmoe_layer(cfg: ArchConfig, key) -> dict:
+    e = n_experts_padded(cfg)
+    d, f = cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        # router stays float32: cluster op
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02},
+        "experts": {
+            "gate_q": jax.random.randint(ks[1], (e, d, f), -127, 128, jnp.int8),
+            "up_q": jax.random.randint(ks[2], (e, d, f), -127, 128, jnp.int8),
+            "down_q": jax.random.randint(ks[3], (e, f, d), -127, 128, jnp.int8),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.d_ff_expert
+        p["shared"] = {
+            "gate": L.init_qlinear(ks[4], d, fs, False),
+            "up": L.init_qlinear(ks[4], d, fs, False),
+            "down": L.init_qlinear(ks[4], fs, d, False),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing (shared by both paths; float32)
+# ---------------------------------------------------------------------------
+
+def _route(cfg: ArchConfig, router_w: jnp.ndarray, h_f32: jnp.ndarray):
+    """h [G, g, D] -> dispatch [G, g, E, C] bool-ish, combine [G, g, E, C] f32."""
+    e = n_experts_padded(cfg)
+    g_tokens = h_f32.shape[1]
+    cap = int(math.ceil(g_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    cap = max(cap, cfg.top_k)
+    logits = jnp.einsum("gtd,de->gte", h_f32, router_w.astype(jnp.float32))
+    if e != cfg.n_experts:  # mask padded experts
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)  # [G, g, K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)  # [G, g, K, E]
+    flat = onehot.reshape(onehot.shape[0], -1, e)  # [G, g*K, E] in (t, k) order
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(onehot.shape)  # [G,g,K,E]
+    pos = jnp.einsum("gtke,gtke->gtk", pos_in_expert, onehot).astype(jnp.int32)  # [G,g,K]
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch/combine [G, g, E, C]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", topv, onehot, pos_oh)
+    aux = _load_balance_loss(probs[..., : cfg.n_experts], onehot[..., : cfg.n_experts])
+    return dispatch, combine, aux
+
+
+def _load_balance_loss(probs, onehot):
+    """Switch-style auxiliary load-balancing loss."""
+    density = onehot.sum(2).mean(1)  # [G, E] fraction routed
+    density_proxy = probs.mean(1)  # [G, E] mean router prob
+    e = probs.shape[-1]
+    return (density * density_proxy).sum(-1).mean() * e
+
+
+def _group(x: jnp.ndarray, g: int):
+    t = x.shape[0]
+    if t % g:
+        g = t  # single group fallback for odd token counts
+    return x.reshape(t // g, g, *x.shape[1:]), g
+
+
+# ---------------------------------------------------------------------------
+# Float path
+# ---------------------------------------------------------------------------
+
+def moe_ffn(cfg: ArchConfig, p: dict, h: jnp.ndarray):
+    """h [B, S, D] -> (out [B, S, D], aux_loss)."""
+    from repro.runtime.activations import constrain
+
+    b, s, d = h.shape
+    flat = h.reshape(b * s, d)
+    grouped, g = _group(flat, DISPATCH_GROUP)
+    dispatch, combine, aux = _route(cfg, p["router"]["w"], grouped.astype(jnp.float32))
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(h.dtype), grouped)
+    xe = constrain(xe, "experts")
+    ge = jnp.einsum("gecd,edf->gecf", xe, p["experts"]["gate"])
+    ue = jnp.einsum("gecd,edf->gecf", xe, p["experts"]["up"])
+    ye = jnp.einsum("gecf,efd->gecd", L.silu(ge) * ue, p["experts"]["down"])
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(h.dtype), ye)
+    out = out.reshape(b, s, d)
+    if "shared" in p:
+        out = out + L.mlp_forward(p["shared"], h, "swiglu")
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Integer path (expert GEMMs int8; routing/combine float32 "cluster" ops)
+# ---------------------------------------------------------------------------
+
+def moe_ffn_w8a8(cfg: ArchConfig, lp: dict, h_q: jnp.ndarray, q: L.QuantConfig):
+    """h_q int8 [B, S, D] (s_act grid) -> int8 [B, S, D] (s_act grid)."""
+    b, s, d = h_q.shape
+    flat = h_q.reshape(b * s, d)
+    grouped, g = _group(flat, DISPATCH_GROUP)
+    h_f32 = grouped.astype(jnp.float32) * q.s_act
+    dispatch, combine, _ = _route(cfg, lp["router"]["w"], h_f32)
+
+    # dispatch int8 tokens (0/1 matrix -> int8 einsum stays exact)
+    from repro.runtime.activations import constrain
+
+    xe = jnp.einsum(
+        "gtec,gtd->gecd", dispatch.astype(jnp.int8), grouped,
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.int8)
+    xe = constrain(xe, "experts")
+    qpa = make_qparams(q.s_act, q.s_w, q.s_act)
+    ge = requantize(
+        jnp.einsum("gecd,edf->gecf", xe, lp["experts"]["gate_q"],
+                   preferred_element_type=jnp.int32),
+        qpa.mult, qpa.shift,
+    )
+    ue = requantize(
+        jnp.einsum("gecd,edf->gecf", xe, lp["experts"]["up_q"],
+                   preferred_element_type=jnp.int32),
+        qpa.mult, qpa.shift,
+    )
+    sg = L.isilu_i8(ge, q.s_act, q.s_act)
+    qprod = make_qparams(q.s_act, q.s_act, q.s_act)
+    inner = requantize(jnp.asarray(sg, jnp.int32) * ue, qprod.mult, qprod.shift)
+    ye = requantize(
+        jnp.einsum("gecf,efd->gecd", inner, lp["experts"]["down_q"],
+                   preferred_element_type=jnp.int32),
+        qpa.mult, qpa.shift,
+    )
+    # combine on the cluster in float (router weights), requantize to s_act
+    out_f = jnp.einsum("gtec,gecd->gtd", combine, ye.astype(jnp.float32) * q.s_act)
+    out_q = jnp.clip(jnp.rint(out_f / q.s_act), -128, 127).astype(jnp.int8)
+    out_q = out_q.reshape(b, s, d)
+
+    if "shared" in lp:
+        site = L.QLinearSite(q.s_act, q.s_w, q.s_act)
+        gq = L.qlinear(lp["shared"]["gate"], h_q, site)
+        uq = L.qlinear(lp["shared"]["up"], h_q, site)
+        sgq = L.isilu_i8(gq, q.s_act, q.s_act)
+        innq = requantize(jnp.asarray(sgq, jnp.int32) * uq, qprod.mult, qprod.shift)
+        sh = L.qlinear(lp["shared"]["down"], innq, site)
+        add = L.make_iadd_params(q.s_act, q.s_act, q.s_act)
+        out_q = L.iadd_i8(out_q, sh, *add)
+    return out_q

@@ -1,0 +1,256 @@
+"""Zamba2 hybrid: Mamba2 trunk + a *shared* attention block every K layers.
+
+The paper's technique applies to the attention blocks (int8 fused
+ITAMax attention, int8 KV cache) while the SSD trunk runs on the float
+"cluster" path — the per-family heterogeneous split (DESIGN.md
+§Arch-applicability).
+
+The shared block has ONE set of weights applied at every site
+(layer K-1, 2K-1, ...) but a *separate KV cache per site*.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.attention import MhaQParams, attention_decode_i8, attention_f32, attention_flash_i8
+from repro.models import layers as L
+from repro.models import mamba2 as MB
+from repro.models.transformer import _merge_heads, _split_heads
+
+S_HYB = 0.06  # static activation grid at the float<->int8 boundary
+QSHARED_WSCALE = 0.01  # static weight grid of the shared attention block
+
+
+def n_sites(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: MB.init_block(cfg, k, dtype))(layer_keys)
+    qkv_dim = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+    shared = {
+        "norm1": L.init_norm("rmsnorm", cfg.d_model, dtype),
+        "wqkv": L.init_linear(ks[1], cfg.d_model, qkv_dim, False, dtype),
+        "wo": L.init_linear(ks[2], cfg.n_heads * cfg.head_dim, cfg.d_model, False, dtype),
+        "norm2": L.init_norm("rmsnorm", cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+    return {
+        "embed": {"table": jax.random.normal(ks[4], (cfg.vocab_padded, cfg.d_model), dtype) * 0.02},
+        "layers": layers,
+        "shared": shared,
+        "final_norm": L.init_norm("rmsnorm", cfg.d_model, dtype),
+        "lm_head": L.init_linear(ks[5], cfg.d_model, cfg.vocab_padded, False, dtype),
+    }
+
+
+def quantize_shared(shared: dict, scale: float = QSHARED_WSCALE) -> dict:
+    """int8 weights for the shared attention block (the ITA-mapped part).
+
+    Fixed-grid quantization onto the static ``QSHARED_WSCALE`` grid —
+    scales are static constants (not pytree leaves) so the serve params
+    stay eval_shape/jit-safe for the dry-run.
+    """
+    out = {}
+    for name in ("wqkv", "wo"):
+        w = shared[name]["w"]
+        w_q = jnp.clip(jnp.rint(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        out[name] = {"w_q": w_q}
+    return out
+
+
+def _shared_attn_f32(cfg: ArchConfig, sp: dict, x: jnp.ndarray, positions):
+    h = L.norm_apply("rmsnorm", sp["norm1"], x)
+    qkv = L.linear(sp["wqkv"], h)
+    q, k, v = _split_heads(qkv, cfg)
+    cos, sin = L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta, x.dtype)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    out = attention_f32(q, k, v, causal=True)
+    x = x + L.linear(sp["wo"], _merge_heads(out))
+    h = L.norm_apply("rmsnorm", sp["norm2"], x)
+    return x + L.mlp_forward(sp["mlp"], h, "gelu")
+
+
+def _quantize_act(x, scale):
+    return jnp.clip(jnp.rint(x / scale), -128, 127).astype(jnp.int8)
+
+
+def _shared_attn_i8(
+    cfg: ArchConfig,
+    sp: dict,
+    sq: dict,
+    x: jnp.ndarray,
+    positions,
+    kv_cache=None,  # (kc, vc, pos) int8 slices for decode
+    block_k: int = 512,
+):
+    """Shared attention with int8 QKV/attention/O (the paper's technique).
+
+    Float trunk activations are quantized at the boundary; MLP stays float
+    (Zamba2's MLP is in the shared block: we also run its GEMMs in float
+    here — the int8 fully-quantized MLP path is exercised by the
+    transformer families).  Returns (x, new_k, new_v).
+    """
+    h = L.norm_apply("rmsnorm", sp["norm1"], x)
+    h_q = _quantize_act(h, S_HYB)
+    p = MhaQParams.make_flash(S_HYB, S_HYB, S_HYB, S_HYB, cfg.head_dim)
+    site_qkv = L.QLinearSite(S_HYB, QSHARED_WSCALE, S_HYB)
+    qkv = L.qlinear({"w_q": sq["wqkv"]["w_q"]}, h_q, site_qkv)
+    qh, kh, vh = _split_heads(qkv, cfg)
+    c_q, s_q = L.rope_tables_i8(positions, cfg.head_dim, cfg.rope_theta)
+    qh = L.apply_rope_i8(qh, c_q, s_q)
+    kh = L.apply_rope_i8(kh, c_q, s_q)
+    if kv_cache is None:
+        out = attention_flash_i8(qh, kh, vh, p, causal=True, block_k=min(block_k, kh.shape[2]))
+        new_kv = (kh, vh)
+    else:
+        kc, vc, pos = kv_cache
+        kc = jax.lax.dynamic_update_slice(kc, kh, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vh, (0, 0, pos, 0))
+        b = qh.shape[0]
+        out = attention_decode_i8(
+            qh, kc, vc, jnp.full((b,), pos + 1, jnp.int32), p,
+            block_k=min(block_k, kc.shape[2]),
+        )
+        new_kv = (kc, vc)
+    site_o = L.QLinearSite(S_HYB, QSHARED_WSCALE, S_HYB)
+    o_q = L.qlinear({"w_q": sq["wo"]["w_q"]}, _merge_heads(out), site_o)
+    x = x + o_q.astype(x.dtype) * S_HYB
+    h = L.norm_apply("rmsnorm", sp["norm2"], x)
+    return x + L.mlp_forward(sp["mlp"], h, "gelu"), new_kv
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    """Float forward (training path)."""
+    from repro.runtime.activations import constrain
+
+    x = params["embed"]["table"][batch["tokens"]]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    k = cfg.attn_every
+
+    def body(carry, xs):
+        x, i = carry
+        x = constrain(x, "residual")
+        x, _, _ = MB.block_forward(cfg, xs, x)
+        x = jax.lax.cond(
+            (i + 1) % k == 0,
+            lambda x: _shared_attn_f32(cfg, params["shared"], x, positions),
+            lambda x: x,
+            x,
+        )
+        return (constrain(x, "residual"), i + 1), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (x, 0), params["layers"])
+    x = L.norm_apply("rmsnorm", params["final_norm"], x)
+    return x @ params["lm_head"]["w"]
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False, **_) -> jnp.ndarray:
+    logits = L.mask_padded_logits(forward(cfg, params, batch, remat=remat), cfg.vocab)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+    cache = MB.init_cache(cfg, batch, dtype)
+    ns = n_sites(cfg)
+    cache["k"] = jnp.zeros((ns, batch, cfg.n_kv_heads, max_len, cfg.head_dim), jnp.int8)
+    cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int, qshared: dict):
+    """Serve prefill: float trunk + int8 shared attention, int8 KV cache."""
+    x = params["embed"]["table"][batch["tokens"]]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    k = cfg.attn_every
+    ns = n_sites(cfg)
+    kcache = jnp.zeros((ns, b, cfg.n_kv_heads, max_len, cfg.head_dim), jnp.int8)
+    vcache = jnp.zeros_like(kcache)
+
+    def body(carry, xs):
+        x, i, kcache, vcache = carry
+        x, conv, ssm = MB.block_forward(cfg, xs, x)
+
+        def apply(x, kcache, vcache):
+            x2, (kh, vh) = _shared_attn_i8(cfg, params["shared"], qshared, x, positions)
+            site = (i + 1) // k - 1
+            kcache = jax.lax.dynamic_update_slice(
+                kcache, kh[None], (site, 0, 0, 0, 0)
+            )
+            vcache = jax.lax.dynamic_update_slice(
+                vcache, vh[None], (site, 0, 0, 0, 0)
+            )
+            return x2, kcache, vcache
+
+        x, kcache, vcache = jax.lax.cond(
+            (i + 1) % k == 0,
+            apply,
+            lambda x, kc, vc: (x, kc, vc),
+            x, kcache, vcache,
+        )
+        return (x, i + 1, kcache, vcache), (conv, ssm)
+
+    (x, _, kcache, vcache), (convs, ssms) = jax.lax.scan(
+        body, (x, 0, kcache, vcache), params["layers"]
+    )
+    cache = {
+        "conv": convs,
+        "ssm": ssms,
+        "k": kcache,
+        "v": vcache,
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    x = L.norm_apply("rmsnorm", params["final_norm"], x[:, -1:])
+    return x @ params["lm_head"]["w"], cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jnp.ndarray, qshared: dict):
+    x = params["embed"]["table"][token]
+    pos = cache["len"]
+    k = cfg.attn_every
+    kcache, vcache = cache["k"], cache["v"]
+
+    def body(carry, xs):
+        x, i, kcache, vcache = carry
+        bp, conv, ssm = xs
+        x, conv, ssm = MB.block_decode(cfg, bp, x, conv, ssm)
+
+        def apply(x, kcache, vcache):
+            site = (i + 1) // k - 1
+            kc = jax.lax.dynamic_index_in_dim(kcache, site, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vcache, site, 0, keepdims=False)
+            x2, (kc, vc) = _shared_attn_i8(
+                cfg, params["shared"], qshared, x, jnp.asarray([pos]), (kc, vc, pos)
+            )
+            kcache = jax.lax.dynamic_update_slice(kcache, kc[None], (site, 0, 0, 0, 0))
+            vcache = jax.lax.dynamic_update_slice(vcache, vc[None], (site, 0, 0, 0, 0))
+            return x2, kcache, vcache
+
+        x, kcache, vcache = jax.lax.cond(
+            (i + 1) % k == 0, apply, lambda x, kc, vc: (x, kc, vc), x, kcache, vcache
+        )
+        return (x, i + 1, kcache, vcache), (conv, ssm)
+
+    (x, _, kcache, vcache), (convs, ssms) = jax.lax.scan(
+        body, (x, 0, kcache, vcache), (params["layers"], cache["conv"], cache["ssm"])
+    )
+    new_cache = {
+        "conv": convs,
+        "ssm": ssms,
+        "k": kcache,
+        "v": vcache,
+        "len": cache["len"] + 1,
+    }
+    x = L.norm_apply("rmsnorm", params["final_norm"], x)
+    return x @ params["lm_head"]["w"], new_cache

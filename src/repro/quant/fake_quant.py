@@ -1,0 +1,43 @@
+"""Fake quantization for QAT — straight-through estimator.
+
+Training runs in float with quantization *noise* injected at every site
+the int8 deployment quantizes (weights, activations, attention logits on
+the ITAMax grid).  The forward value equals the dequantized int8 value;
+the gradient passes through unchanged (STE), with clipping gradients
+zeroed outside the representable range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itamax import ITAMAX_LOGIT_SCALE
+from repro.quant.qparams import INT8_MAX, INT8_MIN
+
+
+def fake_quant(x: jnp.ndarray, scale, qmin: int = INT8_MIN, qmax: int = INT8_MAX) -> jnp.ndarray:
+    """STE fake-quantize: forward = dequant(quant(x)), grad = 1 inside range."""
+    scale = jnp.asarray(scale, x.dtype)
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    y = q * scale
+    # STE with clipping-aware gradient
+    inside = (x >= qmin * scale) & (x <= qmax * scale)
+    y_ste = x + jax.lax.stop_gradient(y - x)
+    return jnp.where(inside, y_ste, jax.lax.stop_gradient(y))
+
+
+def fake_quant_weight(w: jnp.ndarray, per_channel_axis: int | None = None) -> jnp.ndarray:
+    """Symmetric weight fake-quant with scale from the current absmax."""
+    if per_channel_axis is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+        return fake_quant(w, jax.lax.stop_gradient(scale), -127, 127)
+    red = tuple(i for i in range(w.ndim) if i != per_channel_axis)
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=red, keepdims=True), 1e-8) / 127.0
+    return fake_quant(w, jax.lax.stop_gradient(scale), -127, 127)
+
+
+def fake_quant_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Quantization noise on the ITAMax logit grid (B=5): the QAT model
+    sees exactly the +-127 * ln2/32 dynamic range the ASIC sees."""
+    return fake_quant(logits, ITAMAX_LOGIT_SCALE)

@@ -1,0 +1,53 @@
+"""Calibration observers (QuantLib analogue) — functional, jit-friendly.
+
+An observer state is a small pytree updated per calibration batch; the PTQ
+flow threads it through a tapped float forward pass and converts the final
+state into activation scales.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.quant.qparams import INT8_MAX
+
+
+class AbsMaxState(NamedTuple):
+    absmax: jnp.ndarray  # scalar f32
+
+    @staticmethod
+    def init() -> "AbsMaxState":
+        return AbsMaxState(absmax=jnp.zeros((), jnp.float32))
+
+
+def absmax_update(state: AbsMaxState, x: jnp.ndarray) -> AbsMaxState:
+    return AbsMaxState(jnp.maximum(state.absmax, jnp.max(jnp.abs(x)).astype(jnp.float32)))
+
+
+def absmax_scale(state: AbsMaxState, qmax: int = INT8_MAX, margin: float = 1.0) -> jnp.ndarray:
+    return jnp.maximum(state.absmax * margin, 1e-8) / qmax
+
+
+class EmaAbsMaxState(NamedTuple):
+    """EMA of per-batch absmax — robust to single-batch outliers."""
+
+    value: jnp.ndarray
+    initialized: jnp.ndarray
+
+    @staticmethod
+    def init() -> "EmaAbsMaxState":
+        return EmaAbsMaxState(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.bool_))
+
+
+def ema_absmax_update(state: EmaAbsMaxState, x: jnp.ndarray, decay: float = 0.9) -> EmaAbsMaxState:
+    m = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    new = jnp.where(state.initialized, decay * state.value + (1 - decay) * m, m)
+    return EmaAbsMaxState(new, jnp.ones((), jnp.bool_))
+
+
+def percentile_scale(x: jnp.ndarray, pct: float = 99.9, qmax: int = INT8_MAX) -> jnp.ndarray:
+    """One-shot percentile calibration (clips outliers)."""
+    v = jnp.percentile(jnp.abs(x).reshape(-1).astype(jnp.float32), pct)
+    return jnp.maximum(v, 1e-8) / qmax

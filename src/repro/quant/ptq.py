@@ -1,0 +1,65 @@
+"""Post-training quantization: calibrate activation scales from float runs.
+
+The QuantLib-analogue flow for the paper's models: run the float model on
+calibration batches, record per-site absmax (residual stream / post-norm
+activations), and derive the static `QuantConfig` the integer path bakes
+into its requantization multipliers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _layer_slice(layers, i):
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+def calibrate_encoder(
+    cfg: ArchConfig, params: dict, batches: list[dict], margin: float = 1.05
+) -> L.QuantConfig:
+    """Calibrated (s_act, s_res) for the encoder integer path.
+
+    Tracks |residual stream| and |post-norm activations| across layers and
+    calibration batches; scales = absmax * margin / 127.
+    """
+    from repro.models.encoder import embed
+    from repro.models.transformer import layer_fwd
+
+    res_max, act_max = 0.0, 0.0
+    for batch in batches:
+        x = embed(cfg, params, batch)
+        positions = jnp.arange(x.shape[1])
+        res_max = max(res_max, float(jnp.max(jnp.abs(x))))
+        for i in range(cfg.n_layers):
+            lp = _layer_slice(params["layers"], i)
+            h = L.norm_apply(cfg.norm, lp["norm1"], x)
+            act_max = max(act_max, float(jnp.max(jnp.abs(h))))
+            x, _ = layer_fwd(cfg, lp, x, positions, causal=False)
+            res_max = max(res_max, float(jnp.max(jnp.abs(x))))
+    s_res = max(res_max, 1e-3) * margin / 127.0
+    s_act = max(act_max, 1e-3) * margin / 127.0
+    # weight grid from the actual weight range (uniform per-tensor scheme)
+    w_absmax = 0.0
+    for leaf in jax.tree_util.tree_leaves(params["layers"]):
+        if leaf.ndim >= 2:
+            w_absmax = max(w_absmax, float(jnp.max(jnp.abs(leaf))))
+    s_w = max(w_absmax, 1e-3) / 127.0
+    return L.QuantConfig(s_act=s_act, s_res=s_res, s_w=s_w)
+
+
+def quantization_error(float_logits: jnp.ndarray, int8_logits: jnp.ndarray) -> dict:
+    """Fidelity metrics between float and integer model outputs."""
+    f = np.asarray(float_logits, np.float64).reshape(-1)
+    q = np.asarray(int8_logits, np.float64).reshape(-1)
+    cos = float(f @ q / (np.linalg.norm(f) * np.linalg.norm(q) + 1e-12))
+    rel = float(np.linalg.norm(f - q) / (np.linalg.norm(f) + 1e-12))
+    fa = np.asarray(float_logits)
+    qa = np.asarray(int8_logits)
+    agree = float(np.mean(np.argmax(fa, -1) == np.argmax(qa, -1)))
+    return {"cosine": cos, "rel_err": rel, "argmax_agreement": agree}

@@ -1,0 +1,199 @@
+"""Integer quantization parameters and fixed-point requantization.
+
+This module is the arithmetic foundation of the whole framework: every
+integer path (the XLA ``w8a8`` backend, the Pallas ``ita`` kernels and the
+pure-jnp kernel oracles) imports the exact same primitives from here, so
+bit-exactness across backends is by construction.
+
+Conventions (mirroring ITA / Deeploy):
+
+* **Symmetric int8 quantization**: ``real = q * scale`` with ``q`` in
+  [-128, 127] (weights restricted to [-127, 127] so negation is safe).
+* **Requantization** of an int32 accumulator down to int8 uses a
+  fixed-point multiplier: ``out = clip(round(acc * M) + zp)`` where the
+  real multiplier ``M = S_in * S_w / S_out`` is represented as
+  ``mult * 2^-shift`` with ``mult`` a 15-bit unsigned integer and
+  ``shift`` in [SHIFT_MIN, 31].  ITA's RTL uses an 8-bit ``eps_mult`` and a
+  right shift; we widen the multiplier to 15 bits (TPU int32 datapath has
+  the headroom) and note the deviation in DESIGN.md.
+* All arithmetic stays strictly inside int32.  The product
+  ``acc * mult`` may exceed 31 bits, so :func:`requantize` uses an exact
+  base-2**10 double-word decomposition (see proof in the function body)
+  instead of widening to int64 — TPUs have no fast int64 datapath and JAX
+  defaults to 32-bit ints.
+
+Rounding is round-half-up (add ``2^(shift-1)``, then arithmetic right
+shift), matching Deeploy's generated kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN = -128
+INT8_MAX = 127
+# Weights use [-127, 127] so symmetric negation cannot overflow.
+WEIGHT_QMAX = 127
+
+MULT_BITS = 15
+MULT_MAX = (1 << MULT_BITS) - 1  # 32767
+SHIFT_MIN = 10  # required by the exact base-1024 decomposition
+SHIFT_MAX = 31
+
+# Base used in the double-word decomposition of acc * mult.
+_DECOMP_BITS = 10
+_DECOMP_MASK = (1 << _DECOMP_BITS) - 1
+
+
+class QParams(NamedTuple):
+    """Static (python-int) requantization parameters for one tensor edge.
+
+    ``scale`` is the float scale this (mult, shift) pair represents; kept
+    for bookkeeping and for the float fallback path.
+    """
+
+    mult: int
+    shift: int
+    zero_point: int
+    scale: float
+
+    @property
+    def real_multiplier(self) -> float:
+        return self.mult * 2.0 ** (-self.shift)
+
+
+def quantize_multiplier(real_mult: float) -> tuple[int, int]:
+    """Represent ``real_mult`` as ``mult * 2^-shift``.
+
+    ``mult`` is maximized within 15 bits to preserve precision;
+    ``shift`` is clamped to [SHIFT_MIN, SHIFT_MAX].
+    """
+    if real_mult <= 0:
+        return 0, SHIFT_MIN
+    # Want mult = real_mult * 2^shift as large as possible but <= MULT_MAX.
+    shift = int(math.floor(math.log2(MULT_MAX / real_mult)))
+    shift = max(SHIFT_MIN, min(SHIFT_MAX, shift))
+    mult = int(round(real_mult * (1 << shift)))
+    if mult > MULT_MAX:  # rounding pushed it over
+        mult = MULT_MAX
+    if mult == 0:
+        # Underflow: representable floor. Keep the smallest nonzero only if
+        # real_mult is at least half an ulp at SHIFT_MAX.
+        shift = SHIFT_MAX
+        mult = max(0, int(round(real_mult * (1 << shift))))
+    return mult, shift
+
+
+def make_qparams(s_in: float, s_w: float, s_out: float, zero_point: int = 0) -> QParams:
+    """QParams for requantizing an accumulator with scale ``s_in*s_w`` to ``s_out``."""
+    real = (s_in * s_w) / s_out
+    mult, shift = quantize_multiplier(real)
+    return QParams(mult=mult, shift=shift, zero_point=zero_point, scale=s_out)
+
+
+def rounding_rshift(x, shift):
+    """Round-half-up arithmetic right shift. int32-safe for |x| < 2^30."""
+    x = jnp.asarray(x, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    bias = jnp.where(shift > 0, (1 << (shift - 1).clip(0)), 0).astype(jnp.int32)
+    return (x + bias) >> shift
+
+
+def requantize(acc, mult, shift, zero_point=0, *, narrow=False):
+    """Requantize int32 ``acc`` to int8: ``clip(round(acc * mult / 2^shift) + zp)``.
+
+    Exact for ``|acc| < 2^31 / 2^DECOMP_BITS`` and ``mult <= MULT_MAX``,
+    ``shift >= SHIFT_MIN`` — all int32 arithmetic.
+
+    Decomposition proof: write ``acc = hi*2^10 + lo`` (``hi`` floor-shifted,
+    ``0 <= lo < 2^10``).  Then with ``r = 2^(shift-1)``::
+
+        round(acc*mult / 2^shift) = (hi*mult*2^10 + lo*mult + r) >> shift
+                                  = (hi*mult + ((lo*mult + r) >> 10)) >> (shift-10)
+
+    The second equality holds because dropping the low 10 bits of
+    ``lo*mult + r`` discards a fraction < 1 which can never change a floor
+    division by ``2^(shift-10) >= 1``.
+    """
+    acc = jnp.asarray(acc, jnp.int32)
+    mult = jnp.asarray(mult, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    hi = acc >> _DECOMP_BITS
+    lo = acc & _DECOMP_MASK
+    b = hi * mult  # |b| <= 2^21 * 2^15 / 2^10 -> bounded by acc range
+    c = lo * mult + (jnp.int32(1) << (shift - 1))  # >= 0, < 2^25 + 2^30
+    out = (b + (c >> _DECOMP_BITS)) >> (shift - _DECOMP_BITS)
+    qmin = INT8_MIN + 1 if narrow else INT8_MIN
+    return jnp.clip(out + zero_point, qmin, INT8_MAX).astype(jnp.int8)
+
+
+def requantize_wide(acc, mult, shift, zero_point=0, out_bits=16):
+    """Like :func:`requantize` but clipping to a wider signed integer width."""
+    acc = jnp.asarray(acc, jnp.int32)
+    mult = jnp.asarray(mult, jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    hi = acc >> _DECOMP_BITS
+    lo = acc & _DECOMP_MASK
+    b = hi * mult
+    c = lo * mult + (jnp.int32(1) << (shift - 1))
+    out = (b + (c >> _DECOMP_BITS)) >> (shift - _DECOMP_BITS)
+    lim = (1 << (out_bits - 1))
+    return jnp.clip(out + zero_point, -lim, lim - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Float <-> int8 helpers (calibration-time; also used by fake-quant / QAT).
+# ---------------------------------------------------------------------------
+
+def scale_from_absmax(absmax: float, qmax: int = INT8_MAX) -> float:
+    absmax = float(absmax)
+    if absmax <= 0.0:
+        return 1.0
+    return absmax / qmax
+
+
+def quantize_array(x, scale, qmin=INT8_MIN, qmax=INT8_MAX):
+    """Float array -> int8 (symmetric, round-half-away handled by rint)."""
+    q = jnp.clip(jnp.rint(jnp.asarray(x) / scale), qmin, qmax)
+    return q.astype(jnp.int8)
+
+
+def dequantize_array(q, scale):
+    return jnp.asarray(q, jnp.float32) * jnp.float32(scale)
+
+
+def quantize_weight_per_channel(w, axis: int):
+    """Per-output-channel symmetric weight quantization.
+
+    Returns (q_int8, scales) with ``scales`` shaped to broadcast along
+    ``axis``.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    red_axes = tuple(i for i in range(w.ndim) if i != axis)
+    absmax = jnp.max(jnp.abs(w), axis=red_axes, keepdims=True)
+    scales = jnp.where(absmax > 0, absmax / WEIGHT_QMAX, 1.0)
+    q = jnp.clip(jnp.rint(w / scales), -WEIGHT_QMAX, WEIGHT_QMAX).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def quantize_weight_per_tensor(w):
+    w = jnp.asarray(w, jnp.float32)
+    absmax = jnp.max(jnp.abs(w))
+    scale = jnp.where(absmax > 0, absmax / WEIGHT_QMAX, 1.0)
+    q = jnp.clip(jnp.rint(w / scale), -WEIGHT_QMAX, WEIGHT_QMAX).astype(jnp.int8)
+    return q, jnp.float32(scale)
+
+
+def np_quantize_multiplier(real_mult: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized numpy version of :func:`quantize_multiplier` (PTQ time)."""
+    real = np.asarray(real_mult, np.float64)
+    real = np.maximum(real, 1e-30)
+    shift = np.floor(np.log2(MULT_MAX / real)).astype(np.int32)
+    shift = np.clip(shift, SHIFT_MIN, SHIFT_MAX)
+    mult = np.rint(real * (2.0 ** shift)).astype(np.int64)
+    mult = np.clip(mult, 0, MULT_MAX).astype(np.int32)
+    return mult, shift

@@ -1,0 +1,1 @@
+from repro.runtime import elastic, fault, sharding  # noqa: F401

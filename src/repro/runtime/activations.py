@@ -1,0 +1,94 @@
+"""Activation sharding policy (SP) — set by launchers, consumed by models.
+
+Model code calls ``constrain(x, kind)`` at layer boundaries; outside a
+policy context this is a no-op (smoke tests see one device).  Inside, it
+applies ``with_sharding_constraint`` so GSPMD propagates the intended
+layout instead of guessing:
+
+  kind="residual"  [B, S, D]  -> P(data_axes, "model", None)   (Megatron-SP:
+                   sequence sharded over the TP axis between attention/MLP
+                   regions — activation memory / TP)
+  kind="tokens"    [B, S]     -> P(data_axes, None)
+  kind="experts"   [G, E, C, D] -> P(data_axes, "model", None, None)
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict | None = None
+
+
+@contextlib.contextmanager
+def activation_policy(
+    mesh, *, sequence_parallel: bool = True, gather_boundary: bool = True
+):
+    global _ACTIVE
+    da = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    prev = _ACTIVE
+    _ACTIVE = {
+        "mesh": mesh,
+        "da": da,
+        "sp": sequence_parallel,
+        "gather_boundary": gather_boundary,
+    }
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x, kind: str):
+    if _ACTIVE is None:
+        return x
+    da, sp = _ACTIVE["da"], _ACTIVE["sp"]
+    mesh = _ACTIVE["mesh"]
+    import numpy as np
+
+    n_da = int(np.prod([mesh.shape[a] for a in da]))
+    n_mdl = int(mesh.shape.get("model", 1))
+
+    def fits(dim, n):
+        return dim % n == 0 and dim >= n
+
+    if kind in ("gathered", "heads") and not _ACTIVE.get("gather_boundary", True):
+        return x
+    if kind == "residual":  # [B, S, D] between layers: SP over the TP axis
+        b_ax = da if fits(x.shape[0], n_da) else None
+        s_ax = "model" if (sp and fits(x.shape[1], n_mdl)) else None
+        spec = P(b_ax, s_ax, None)
+    elif kind == "gathered":  # [B, S, D] at the Megatron-SP boundary:
+        # gather the (cheap) activations so the (expensive) TP weights stay
+        # sharded through the projections
+        spec = P(da if fits(x.shape[0], n_da) else None, None, None)
+    elif kind == "heads":  # [B, H, S, D] attention internals: head-parallel,
+        # falling back to sequence-parallel when H doesn't divide the TP
+        # axis (GQA with 24 heads on 16-way TP would otherwise make GSPMD
+        # shard the head_dim *contraction* and all-reduce the logits per
+        # KV block — see EXPERIMENTS.md §Perf granite iteration)
+        b_ax = da if fits(x.shape[0], n_da) else None
+        if fits(x.shape[1], n_mdl):
+            spec = P(b_ax, "model", None, None)
+        elif fits(x.shape[2], n_mdl):
+            spec = P(b_ax, None, "model", None)
+        else:
+            spec = P(b_ax, None, None, None)
+    elif kind == "ssd":  # [B, L, H, P] SSD internals: head-parallel
+        b_ax = da if fits(x.shape[0], n_da) else None
+        spec = P(b_ax, None, "model" if fits(x.shape[2], n_mdl) else None, None)
+    elif kind == "ssd_l":  # [B, nc, H, c, c] SSD chunk decay matrix
+        b_ax = da if fits(x.shape[0], n_da) else None
+        spec = P(b_ax, None, "model" if fits(x.shape[2], n_mdl) else None, None, None)
+    elif kind == "tokens":  # [B, S]
+        spec = P(da if fits(x.shape[0], n_da) else None, None)
+    elif kind == "experts":  # [G, E, C, D]
+        g_ax = da if fits(x.shape[0], n_da) else None
+        spec = P(g_ax, "model" if fits(x.shape[1], n_mdl) else None, None, None)
+    else:
+        return x
+    if x.ndim != len(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,40 @@
+"""Elastic re-meshing: shrink/regrow the data axis after node failures.
+
+Policy: the model axis is load-bearing (weights are TP/EP-sharded across
+it) so it is preserved; lost capacity comes out of the data axis.  Params
+and optimizer state are re-sharded by device_put onto the new mesh —
+combined with the checkpointer this yields restore-on-fewer-nodes, and the
+deterministic data pipeline keeps the batch stream consistent (the global
+batch is re-split across the surviving data shards).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.runtime.sharding import param_shardings
+
+
+def plan_mesh(n_devices: int, model_parallel: int, axis_names=("data", "model")) -> tuple:
+    """Largest (data, model) grid that fits ``n_devices``."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot preserve model axis {model_parallel} with {n_devices} devices"
+        )
+    data = n_devices // model_parallel
+    return (data, model_parallel), axis_names
+
+
+def remesh(devices, model_parallel: int) -> Mesh:
+    (data, model), names = plan_mesh(len(devices), model_parallel)
+    import numpy as np
+
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(grid, names)
+
+
+def reshard_state(state, new_mesh: Mesh):
+    """Re-shard an arbitrary pytree of params/opt-state onto ``new_mesh``."""
+    sh = param_shardings(new_mesh, state)
+    return jax.device_put(state, sh)

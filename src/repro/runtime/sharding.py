@@ -1,0 +1,179 @@
+"""Sharding rules: DP / TP / EP / SP over the production mesh.
+
+Parameter placement is decided by path-suffix rules (one table serves the
+float and int8 layouts — ``w`` and ``w_q`` leaves shard identically).
+Stacked-layer leaves carry a leading L dim that is never sharded; rules
+specify the *trailing* dims and are left-padded with None.
+
+Axes:
+  "pod"   : data-parallel across pods (slow DCN; grad compression applies)
+  "data"  : data-parallel within a pod; also sequence-shards long KV caches
+  "model" : tensor/expert parallel (TP for dense, EP for MoE experts,
+            head-parallel for attention and SSD state)
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# (path regex, trailing PartitionSpec entries)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / heads
+    (r"embed/table(_q)?$", ("model", None)),
+    (r"lm_head/w(_q)?$", (None, "model")),
+    (r"(dec_embed)/table(_q)?$", ("model", None)),
+    (r"(pos|enc_pos|dec_pos)(_q)?$", (None, None)),
+    # attention projections
+    (r"attn/wqkv/(w|w_q)$", (None, "model")),
+    (r"attn/wqkv/(b|b_q)$", ("model",)),
+    (r"attn/wo/(w|w_q)$", ("model", None)),
+    (r"attn/wq/(w|w_q)$", (None, "model")),
+    (r"attn/wkv/(w|w_q)$", (None, "model")),
+    (r"shared/wqkv/(w|w_q)$", (None, "model")),
+    (r"shared/wo/(w|w_q)$", ("model", None)),
+    # dense MLP
+    (r"mlp/(gate|up)/(w|w_q)$", (None, "model")),
+    (r"mlp/(gate|up)/(b|b_q)$", ("model",)),
+    (r"mlp/down/(w|w_q)$", ("model", None)),
+    (r"mlp/down/(b|b_q)$", (None,)),
+    # MoE experts: EP over "model"
+    (r"experts/(gate|up|down)(_q)?$", ("model", None, None)),
+    (r"router/w$", (None, None)),
+    # Mamba2 / SSD: inner dim (heads) over "model"
+    (r"in_proj/(w|w_q)$", (None, "model")),
+    (r"out_proj/(w|w_q)$", ("model", None)),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(A_log|dt_bias|D)$", ("model",)),
+    (r"out_norm/g$", ("model",)),
+]
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axes whose size does not divide the corresponding dim (e.g.
+    batch=1 cells cannot shard over the data axes)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        dim = shape[i] if i < len(shape) else 0
+        out.append(entry if (dim % n == 0 and dim >= n) else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def spec_for_param(path: str, ndim: int, fsdp: bool = False) -> P:
+    """TP/EP placement from the rules table; with ``fsdp`` the first
+    unsharded trailing dim of every >=2-D weight additionally shards over
+    'data' (ZeRO-3: params+grads+optimizer sharded 256-way — required to
+    fit the 100B-class train cells; GSPMD re-gathers per use).
+
+    §Perf note: the alternative of deepening the TP dim to
+    ('model','data') was tried and REFUTED — it increases collective
+    traffic by ~25 % (full-weight re-gathers over both axes) without
+    removing GSPMD's dW gather-and-replicate artifact."""
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = list(trailing)
+            if len(spec) > ndim:  # un-stacked variant (single shared block)
+                spec = spec[-ndim:]
+            if fsdp and ndim >= 2:
+                for i, e in enumerate(spec):
+                    if e is None:
+                        spec[i] = "data"
+                        break
+            pad = [None] * (ndim - len(spec))
+            return P(*pad, *spec)
+    return P()  # replicate (norms, scalars, biases by default)
+
+
+def param_shardings(mesh: Mesh, params, fsdp: bool = False) -> dict:
+    """NamedSharding pytree matching ``params`` (works for float and int8)."""
+
+    def assign(path, leaf):
+        spec = spec_for_param(_path_str(path), np.ndim(leaf), fsdp=fsdp)
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, np.shape(leaf)))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_shardings(mesh: Mesh, batch) -> dict:
+    """Shard every batch leaf's leading (batch) dim over the data axes."""
+    da = data_axes(mesh)
+
+    def assign(path, leaf):
+        nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = P(da, *([None] * (nd - 1)))
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def cache_shardings(mesh: Mesh, cache, *, seq_shard: bool = False) -> dict:
+    """KV/SSM cache placement.
+
+    Transformer caches [L, B, Hkv, S, hd]: batch over data axes, heads over
+    model.  With ``seq_shard`` (long-context, batch=1) the sequence dim is
+    sharded over "data" instead — the flash-decode combine then runs as a
+    distributed softmax (XLA inserts the psum).
+    """
+    da = data_axes(mesh)
+
+    def assign(path, leaf):
+        leaf_name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if leaf_name == "len" or nd == 0:
+            return NamedSharding(mesh, P())
+        if leaf_name in ("k", "v", "ck", "cv"):
+            if seq_shard:
+                spec = P(None, None, "model", "data", None)
+            else:
+                spec = P(None, da, "model", None, None)
+        elif leaf_name == "conv":  # [L, B, k, conv_dim]
+            spec = P(None, da, None, "model")
+        elif leaf_name == "ssm":  # [L, B, H, P, N]
+            spec = P(None, da, "model", None, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state, param_sh):
+    """AdamW mu/nu mirror the parameter shardings; step is replicated."""
+    from repro.optim.adamw import AdamWState
+
+    assert isinstance(opt_state, AdamWState)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree.map(lambda s: s, param_sh),
+        nu=jax.tree.map(lambda s: s, param_sh),
+    )

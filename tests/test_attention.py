@@ -1,0 +1,158 @@
+"""Tests for quantized MHA: rowwise (paper), flash (TPU), decode paths."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as attn
+from repro.core import itamax as im
+from repro.quant.qparams import quantize_array
+
+
+def _setup(rng, b, h, hkv, sq, sk, d, flash=False, causal=False):
+    q = rng.normal(size=(b, h, sq, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, sk, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, sk, d)).astype(np.float32)
+    s_q = float(np.abs(q).max() / 127)
+    s_k = float(np.abs(k).max() / 127)
+    s_v = float(np.abs(v).max() / 127)
+    ref = np.asarray(
+        attn.attention_f32(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+            logit_clip=127 * im.ITAMAX_LOGIT_SCALE,
+        )
+    )
+    s_out = float(np.abs(ref).max() / 127) + 1e-9
+    mk = attn.MhaQParams.make_flash if flash else attn.MhaQParams.make
+    p = mk(s_q, s_k, s_v, s_out, d)
+    qq = quantize_array(jnp.asarray(q), s_q)
+    kq = quantize_array(jnp.asarray(k), s_k)
+    vq = quantize_array(jnp.asarray(v), s_v)
+    return qq, kq, vq, p, s_out, (q, k, v)
+
+
+class TestRowwiseAttention:
+    @pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2)])
+    def test_matches_float(self, h, hkv):
+        rng = np.random.default_rng(0)
+        qq, kq, vq, p, s_out, (q, k, v) = _setup(rng, 2, h, hkv, 64, 64, 32)
+        got = np.asarray(attn.attention_rowwise_i8(qq, kq, vq, p), np.float32) * s_out
+        want = np.asarray(
+            attn.attention_f32(
+                jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                logit_clip=127 * im.ITAMAX_LOGIT_SCALE,
+            )
+        )
+        # integer path vs clipped-float reference
+        assert np.max(np.abs(got - want)) < 0.08 * np.abs(want).max() + 6 * s_out
+
+    def test_causal(self):
+        rng = np.random.default_rng(1)
+        qq, kq, vq, p, s_out, (q, k, v) = _setup(rng, 1, 2, 2, 32, 32, 16, causal=True)
+        got = np.asarray(
+            attn.attention_rowwise_i8(qq, kq, vq, p, causal=True), np.float32
+        ) * s_out
+        want = np.asarray(
+            attn.attention_f32(
+                jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
+                logit_clip=127 * im.ITAMAX_LOGIT_SCALE,
+            )
+        )
+        assert np.max(np.abs(got - want)) < 0.08 * np.abs(want).max() + 6 * s_out
+
+    def test_first_token_causal_equals_single(self):
+        """Causal attention for token 0 only sees itself."""
+        rng = np.random.default_rng(2)
+        qq, kq, vq, p, s_out, _ = _setup(rng, 1, 2, 2, 8, 8, 16)
+        out = np.asarray(attn.attention_rowwise_i8(qq, kq, vq, p, causal=True))
+        # token 0 attends only to key 0 -> output ~ V[0] requantized
+        v0 = np.asarray(vq, np.int32)[0, :, 0]  # [H, D]
+        from repro.quant.qparams import requantize
+
+        want = np.asarray(requantize(jnp.asarray(v0 * 127), p.out_mult, p.out_shift))
+        got = out[0, :, 0]
+        assert np.max(np.abs(got.astype(int) - want.astype(int))) <= 2
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sk,blk", [(128, 32), (256, 64), (512, 512)])
+    def test_matches_float(self, sk, blk):
+        rng = np.random.default_rng(3)
+        qq, kq, vq, p, s_out, (q, k, v) = _setup(rng, 2, 4, 2, 32, sk, 32, flash=True)
+        got = np.asarray(
+            attn.attention_flash_i8(qq, kq, vq, p, block_k=blk), np.float32
+        ) * s_out
+        want = np.asarray(
+            attn.attention_f32(
+                jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                logit_clip=127 * im.ITAMAX_LOGIT_SCALE,
+            )
+        )
+        assert np.max(np.abs(got - want)) < 0.08 * np.abs(want).max() + 6 * s_out
+
+    def test_causal_matches_rowwise_closely(self):
+        rng = np.random.default_rng(4)
+        qq, kq, vq, pf, s_out, (q, k, v) = _setup(
+            rng, 1, 2, 2, 64, 64, 16, flash=True, causal=True
+        )
+        d = q.shape[-1]
+        s_q = float(np.abs(q).max() / 127)
+        s_k = float(np.abs(k).max() / 127)
+        s_v = float(np.abs(v).max() / 127)
+        pr = attn.MhaQParams.make(s_q, s_k, s_v, s_out, d)
+        a = np.asarray(attn.attention_flash_i8(qq, kq, vq, pf, causal=True, block_k=32), np.float32) * s_out
+        b = np.asarray(attn.attention_rowwise_i8(qq, kq, vq, pr, causal=True), np.float32) * s_out
+        # same data, same scales; only the LUT width / renorm schedule differ
+        assert np.max(np.abs(a - b)) < 10 * s_out
+
+
+class TestDecode:
+    def test_decode_equals_last_row_of_prefill(self):
+        rng = np.random.default_rng(5)
+        b, h, s, d = 2, 4, 64, 32
+        qq, kq, vq, p, s_out, _ = _setup(rng, b, h, h, s, s, d, flash=True)
+        # full causal prefill
+        full = np.asarray(attn.attention_flash_i8(qq, kq, vq, p, causal=True, block_k=32))
+        # decode the last token against a padded cache with valid length s
+        smax = 128
+        kc = jnp.zeros((b, h, smax, d), jnp.int8).at[:, :, :s].set(kq)
+        vc = jnp.zeros((b, h, smax, d), jnp.int8).at[:, :, :s].set(vq)
+        qlast = qq[:, :, s - 1 : s]
+        dec = np.asarray(
+            attn.attention_decode_i8(
+                qlast, kc, vc, jnp.full((b,), s, jnp.int32), p, block_k=32
+            )
+        )
+        # same math, same block size -> near-identical (mask path differs
+        # only in renorm schedule for padded blocks)
+        assert np.max(np.abs(dec[:, :, 0].astype(int) - full[:, :, -1].astype(int))) <= 1
+
+    def test_growing_cache_consistency(self):
+        """Decoding with extra padded space must not change results."""
+        rng = np.random.default_rng(6)
+        b, h, s, d = 1, 2, 32, 16
+        qq, kq, vq, p, _, _ = _setup(rng, b, h, h, s, s, d, flash=True)
+        q1 = qq[:, :, -1:]
+        outs = []
+        for smax in (64, 128):
+            kc = jnp.zeros((b, h, smax, d), jnp.int8).at[:, :, :s].set(kq)
+            vc = jnp.zeros((b, h, smax, d), jnp.int8).at[:, :, :s].set(vq)
+            outs.append(
+                np.asarray(
+                    attn.attention_decode_i8(
+                        q1, kc, vc, jnp.full((b,), s, jnp.int32), p, block_k=32
+                    )
+                )
+            )
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+class TestGQA:
+    def test_gqa_equals_repeated_mha(self):
+        rng = np.random.default_rng(7)
+        qq, kq, vq, p, _, _ = _setup(rng, 1, 8, 2, 16, 16, 16)
+        a = np.asarray(attn.attention_rowwise_i8(qq, kq, vq, p))
+        kq_rep = jnp.repeat(kq, 4, axis=1)
+        vq_rep = jnp.repeat(vq, 4, axis=1)
+        b = np.asarray(attn.attention_rowwise_i8(qq, kq_rep, vq_rep, p))
+        np.testing.assert_array_equal(a, b)

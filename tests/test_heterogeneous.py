@@ -1,0 +1,64 @@
+"""Heterogeneous dispatch: the runtime 'ITA or cluster' decision."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heterogeneous as het
+
+
+def _table():
+    t = het.DispatchTable()
+    t.register("gemm", het.Engine.ACCELERATOR, lambda x, w: ("ita", x @ w))
+    t.register("gemm", het.Engine.CLUSTER, lambda x, w: ("cluster", x @ w))
+    t.register("layernorm", het.Engine.CLUSTER, lambda x: ("cluster", x))
+    return t
+
+
+class TestSupportPredicate:
+    def test_aligned_int8_gemm_supported(self):
+        op = het.OpDesc("gemm", shapes=((128, 256), (256, 64)))
+        assert het.ita_supports(op)
+
+    def test_misaligned_rejected(self):
+        op = het.OpDesc("gemm", shapes=((100, 256), (256, 60)))
+        assert not het.ita_supports(op)
+
+    def test_float_rejected(self):
+        op = het.OpDesc("gemm", shapes=((128, 128),), dtype="float32")
+        assert not het.ita_supports(op)
+
+    def test_unsupported_kind_rejected(self):
+        assert not het.ita_supports(het.OpDesc("layernorm", shapes=((128, 128),)))
+
+    def test_tpu_granule_stricter(self):
+        op = het.OpDesc("gemm", shapes=((192, 192),))
+        assert het.ita_supports(op, granule=het.ITA_GRANULE)
+        assert not het.ita_supports(op, granule=het.TPU_GRANULE)
+
+
+class TestDispatch:
+    def test_supported_goes_to_accelerator(self):
+        t = _table()
+        op = het.OpDesc("gemm", shapes=((128, 128), (128, 128)))
+        engine, fn = t.resolve(op, het.Backend.W8A8)
+        assert engine is het.Engine.ACCELERATOR
+        tag, _ = fn(jnp.zeros((128, 128)), jnp.zeros((128, 128)))
+        assert tag == "ita"
+
+    def test_misaligned_falls_back(self):
+        t = _table()
+        op = het.OpDesc("gemm", shapes=((100, 100), (100, 100)))
+        engine, _ = t.resolve(op, het.Backend.W8A8)
+        assert engine is het.Engine.CLUSTER
+
+    def test_float_backend_always_cluster(self):
+        t = _table()
+        op = het.OpDesc("gemm", shapes=((128, 128), (128, 128)))
+        engine, _ = t.resolve(op, het.Backend.FLOAT)
+        assert engine is het.Engine.CLUSTER
+
+    def test_cluster_only_op(self):
+        t = _table()
+        engine, _ = t.resolve(het.OpDesc("layernorm", shapes=((128, 128),)), het.Backend.W8A8)
+        assert engine is het.Engine.CLUSTER

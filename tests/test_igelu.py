@@ -1,0 +1,62 @@
+"""Tests for the integer GeLU/ReLU activation unit."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import igelu
+
+
+class TestIGelu:
+    @pytest.mark.parametrize("scale", [0.02, 0.05, 0.1])
+    def test_matches_float_polynomial(self, scale):
+        q = jnp.arange(-128, 128, dtype=jnp.int32)
+        p = igelu.make_igelu_params(scale)
+        raw = np.asarray(igelu.igelu_int(q, p), np.float64) * p.out_scale
+        want = np.asarray(igelu.igelu_f32(np.arange(-128, 128) * scale))
+        # integer poly vs float poly: error ~ 1 input LSB
+        assert np.max(np.abs(raw - want)) < 1.1 * scale, np.max(np.abs(raw - want))
+
+    @pytest.mark.parametrize("scale", [0.02, 0.05])
+    def test_close_to_true_gelu(self, scale):
+        q = jnp.arange(-128, 128, dtype=jnp.int32)
+        p = igelu.make_igelu_params(scale)
+        raw = np.asarray(igelu.igelu_int(q, p), np.float64) * p.out_scale
+        x = np.arange(-128, 128) * scale
+        want = np.asarray(igelu.gelu_f32(jnp.asarray(x)))
+        # I-BERT poly approximation error (abs, in output units)
+        assert np.max(np.abs(raw - want)) < 0.02 + 1.5 * scale
+
+    def test_i8_fused_path(self):
+        scale = 0.04
+        q = jnp.arange(-128, 128, dtype=jnp.int8)
+        out = np.asarray(igelu.igelu_i8(q, scale, scale), np.float32) * scale
+        x = np.arange(-128, 128) * scale
+        want = np.asarray(igelu.gelu_f32(jnp.asarray(x)))
+        assert np.max(np.abs(out - want)) < 3 * scale
+
+    def test_saturation_regions(self):
+        """GeLU(x) -> x for large x, -> 0 for very negative x."""
+        p = igelu.make_igelu_params(0.05)
+        big = int(igelu.igelu_int(jnp.int32(127), p)) * p.out_scale
+        assert abs(big - 127 * 0.05) < 0.05
+        neg = int(igelu.igelu_int(jnp.int32(-128), p)) * p.out_scale
+        assert abs(neg) < 0.05
+
+    def test_scale_guard(self):
+        with pytest.raises(ValueError):
+            igelu.make_igelu_params(1e-5)
+
+    def test_int32_bounds(self):
+        """Worst-case intermediates stay in int32 at the minimum scale."""
+        s = igelu.MIN_GELU_SCALE
+        p = igelu.make_igelu_params(s)
+        assert abs(p.q_c) * 2 * 128 < 2**31
+
+
+class TestIRelu:
+    def test_matches_float(self):
+        q = jnp.arange(-128, 128, dtype=jnp.int8)
+        out = np.asarray(igelu.irelu_i8(q, 0.1, 0.1), np.int32)
+        want = np.maximum(np.arange(-128, 128), 0)
+        np.testing.assert_array_equal(out, np.clip(want, -128, 127))

@@ -1,0 +1,85 @@
+"""Tests for integer LayerNorm / RMSNorm and the integer sqrt."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ilayernorm as iln
+from repro.quant.qparams import quantize_array
+
+
+class TestISqrt:
+    @given(v=st.integers(0, 2**31 - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_floor_sqrt(self, v):
+        got = int(iln.isqrt(jnp.int32(v)))
+        want = max(1, int(np.floor(np.sqrt(v))))
+        assert got == want
+
+    def test_vector(self):
+        v = jnp.asarray([0, 1, 2, 3, 4, 15, 16, 2**30, 2**31 - 1], jnp.int32)
+        got = np.asarray(iln.isqrt(v))
+        want = np.maximum(1, np.floor(np.sqrt(np.asarray(v, np.float64)))).astype(int)
+        np.testing.assert_array_equal(got, want)
+
+
+def _quant_roundtrip_ln(x, kind, gamma=None, beta=None):
+    s_in = float(np.abs(x).max() / 127)
+    q = quantize_array(jnp.asarray(x), s_in)
+    if kind == "np":
+        want = iln.layernorm_f32(jnp.asarray(x))
+    elif kind == "ln":
+        want = iln.layernorm_f32(jnp.asarray(x), jnp.asarray(gamma), jnp.asarray(beta))
+    else:
+        want = iln.rmsnorm_f32(jnp.asarray(x), jnp.asarray(gamma))
+    # calibrated output scale (what the PTQ observer would pick)
+    s_out = float(np.abs(np.asarray(want)).max() / 127)
+    if kind == "np":
+        out = iln.ilayernorm_np_i8(q, s_out)
+    elif kind == "ln":
+        s_g = float(np.abs(gamma).max() / 127)
+        g_q = quantize_array(jnp.asarray(gamma), s_g)
+        beta_q = jnp.asarray(np.round(beta / (iln.NORM_SCALE * s_g)), jnp.int32)
+        out = iln.ilayernorm_i8(q, g_q, beta_q, s_g, s_out)
+    else:
+        s_g = float(np.abs(gamma).max() / 127)
+        g_q = quantize_array(jnp.asarray(gamma), s_g)
+        out = iln.irmsnorm_i8(q, g_q, s_g, s_out)
+    return np.asarray(out, np.float32) * s_out, np.asarray(want)
+
+
+class TestIntegerNorms:
+    @pytest.mark.parametrize("n", [64, 256, 2048])
+    def test_nonparametric(self, n):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(8, n)).astype(np.float32) * 3.0
+        got, want = _quant_roundtrip_ln(x, "np")
+        assert np.max(np.abs(got - want)) < 0.15, np.max(np.abs(got - want))
+
+    def test_layernorm_affine(self):
+        rng = np.random.default_rng(1)
+        n = 512
+        x = rng.normal(size=(4, n)).astype(np.float32)
+        gamma = rng.normal(size=(n,)).astype(np.float32) * 0.5 + 1.0
+        beta = rng.normal(size=(n,)).astype(np.float32) * 0.2
+        got, want = _quant_roundtrip_ln(x, "ln", gamma, beta)
+        assert np.max(np.abs(got - want)) < 0.2, np.max(np.abs(got - want))
+
+    def test_rmsnorm(self):
+        rng = np.random.default_rng(2)
+        n = 1024
+        x = rng.normal(size=(4, n)).astype(np.float32) * 2
+        gamma = np.abs(rng.normal(size=(n,)).astype(np.float32)) + 0.5
+        got, want = _quant_roundtrip_ln(x, "rms", gamma)
+        assert np.max(np.abs(got - want)) < 0.25, np.max(np.abs(got - want))
+
+    def test_int32_worst_case(self):
+        """All-extreme int8 rows at max width must not overflow."""
+        x = jnp.full((1, 16384), 127, jnp.int8).at[0, ::2].set(-128)
+        out = iln.ilayernorm_np_i8(x, 4.0 / 127)
+        assert np.isfinite(np.asarray(out, np.float32)).all()
+        # normalized values should be ~ +-1
+        vals = np.asarray(out, np.float32) * 4.0 / 127
+        assert np.abs(np.abs(vals).mean() - 1.0) < 0.1

@@ -1,0 +1,103 @@
+"""Unit + property tests for the fixed-point requantization core."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.quant.qparams import (
+    MULT_MAX,
+    SHIFT_MAX,
+    SHIFT_MIN,
+    make_qparams,
+    quantize_array,
+    quantize_multiplier,
+    quantize_weight_per_channel,
+    requantize,
+    requantize_wide,
+    rounding_rshift,
+)
+
+
+def _requant_gold(acc, mult, shift, zp=0):
+    """Arbitrary-precision (python int) reference of requantize."""
+    out = (int(acc) * int(mult) + (1 << (shift - 1))) >> shift
+    return int(np.clip(out + zp, -128, 127))
+
+
+class TestQuantizeMultiplier:
+    @pytest.mark.parametrize("m", [1e-4, 3.7e-3, 0.02, 0.13, 0.5, 1.0, 7.3, 31.9])
+    def test_representation_error(self, m):
+        mult, shift = quantize_multiplier(m)
+        assert 0 <= mult <= MULT_MAX
+        assert SHIFT_MIN <= shift <= SHIFT_MAX
+        rel = abs(mult * 2.0**-shift - m) / m
+        assert rel < 2e-4, (m, mult, shift, rel)
+
+    def test_zero(self):
+        assert quantize_multiplier(0.0)[0] == 0
+
+
+class TestRequantize:
+    @given(
+        acc=st.integers(-(1 << 25), (1 << 25) - 1),
+        mult=st.integers(1, MULT_MAX),
+        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_bit_exact_vs_python_int(self, acc, mult, shift):
+        got = int(requantize(jnp.int32(acc), mult, shift))
+        assert got == _requant_gold(acc, mult, shift)
+
+    @given(
+        acc=st.integers(-(1 << 25), (1 << 25) - 1),
+        mult=st.integers(1, MULT_MAX),
+        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_wide_matches_float(self, acc, mult, shift):
+        got = int(requantize_wide(jnp.int32(acc), mult, shift, out_bits=31))
+        gold = (acc * mult + (1 << (shift - 1))) >> shift
+        gold = int(np.clip(gold, -(1 << 30), (1 << 30) - 1))
+        assert got == gold
+
+    def test_vectorized(self):
+        accs = jnp.arange(-1000, 1000, 7, dtype=jnp.int32) * 1001
+        out = requantize(accs, 12345, 20)
+        gold = np.array([_requant_gold(int(a), 12345, 20) for a in np.asarray(accs)])
+        np.testing.assert_array_equal(np.asarray(out), gold)
+
+    def test_end_to_end_scaling(self):
+        # quantize float -> requant == float multiply within 1 LSB
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(64,)).astype(np.float32) * 1000
+        acc = jnp.asarray(np.round(x), jnp.int32)
+        s_in, s_out = 0.01, 0.37
+        qp = make_qparams(s_in, 1.0, s_out)
+        got = np.asarray(requantize(acc, qp.mult, qp.shift), np.int32)
+        want = np.clip(np.round(np.round(x) * s_in / s_out), -128, 127)
+        assert np.max(np.abs(got - want)) <= 1
+
+
+class TestRoundingShift:
+    @given(x=st.integers(-(1 << 29), (1 << 29)), s=st.integers(1, 20))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_python(self, x, s):
+        got = int(rounding_rshift(jnp.int32(x), s))
+        assert got == (x + (1 << (s - 1))) >> s
+
+
+class TestWeightQuant:
+    def test_per_channel_roundtrip(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(32, 16)).astype(np.float32)
+        q, s = quantize_weight_per_channel(jnp.asarray(w), axis=1)
+        deq = np.asarray(q, np.float32) * np.asarray(s)
+        err = np.abs(deq - w)
+        assert err.max() <= np.abs(w).max() / 127 * 0.51 + 1e-6
+
+    def test_quantize_array_clip(self):
+        x = jnp.asarray([-1e9, 0.0, 1e9])
+        q = quantize_array(x, 1.0)
+        assert list(np.asarray(q)) == [-128, 0, 127]

@@ -1,0 +1,60 @@
+"""Tests for the quantized linear layer (ITA GEMM mode, XLA path)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant_linear as ql
+from repro.quant.qparams import quantize_array, quantize_weight_per_channel
+
+
+def _setup(rng, m, k, n, act, per_channel=False):
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32) / np.sqrt(k)
+    b = rng.normal(size=(n,)).astype(np.float32) * 0.1
+    s_in = float(np.abs(x).max() / 127)
+    if per_channel:
+        w_q, s_w = quantize_weight_per_channel(jnp.asarray(w), axis=1)
+        s_w_np = np.asarray(s_w).reshape(-1)
+    else:
+        s_w_np = np.abs(w).max() / 127
+        w_q = quantize_array(jnp.asarray(w), float(s_w_np), -127, 127)
+    y_ref = np.asarray(ql.linear_f32(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act))
+    s_out = float(np.abs(y_ref).max() / 127) + 1e-9
+    s_pre = float(np.abs(np.asarray(x @ w + b)).max() / 127) + 1e-9
+    bias_q = jnp.asarray(np.round(b / (s_in * s_w_np)), jnp.int32)
+    p = ql.make_qlinear_params(s_in, s_w_np, s_out, act, s_preact=s_pre)
+    x_q = quantize_array(jnp.asarray(x), s_in)
+    return x_q, w_q, bias_q, p, y_ref, s_out
+
+
+class TestQLinear:
+    @pytest.mark.parametrize("act", [ql.ACT_IDENTITY, ql.ACT_RELU, ql.ACT_GELU])
+    @pytest.mark.parametrize("per_channel", [False, True])
+    def test_matches_float(self, act, per_channel):
+        rng = np.random.default_rng(0)
+        x_q, w_q, bias_q, p, y_ref, s_out = _setup(rng, 32, 128, 64, act, per_channel)
+        y_q = np.asarray(ql.qlinear_i8(x_q, w_q, bias_q, p), np.float32) * s_out
+        # int8 x int8 GEMM: error budget ~ input-quant noise propagated
+        tol = 6 * s_out + 0.02 * np.abs(y_ref).max()
+        assert np.max(np.abs(y_q - y_ref)) < tol, np.max(np.abs(y_q - y_ref))
+
+    def test_no_bias(self):
+        rng = np.random.default_rng(1)
+        x_q, w_q, _, p, _, s_out = _setup(rng, 8, 64, 32, ql.ACT_IDENTITY)
+        y = ql.qlinear_i8(x_q, w_q, None, p)
+        assert y.dtype == jnp.int8 and y.shape == (8, 32)
+
+    def test_batched_input(self):
+        rng = np.random.default_rng(2)
+        x_q, w_q, bias_q, p, _, _ = _setup(rng, 4, 64, 32, ql.ACT_IDENTITY)
+        x3 = jnp.broadcast_to(x_q, (5, 4, 64))
+        y3 = ql.qlinear_i8(x3, w_q, bias_q, p)
+        y1 = ql.qlinear_i8(x_q, w_q, bias_q, p)
+        np.testing.assert_array_equal(np.asarray(y3[2]), np.asarray(y1))
+
+    def test_relu_nonnegative(self):
+        rng = np.random.default_rng(3)
+        x_q, w_q, bias_q, p, _, _ = _setup(rng, 16, 64, 32, ql.ACT_RELU)
+        y = np.asarray(ql.qlinear_i8(x_q, w_q, bias_q, p))
+        assert (y >= 0).all()

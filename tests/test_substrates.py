@@ -1,0 +1,245 @@
+"""Substrate tests: checkpoint/restart, fault supervision, elastic remesh,
+gradient compression, sharding rules, data pipeline, HLO analysis."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.optim import adamw, compression
+from repro.runtime import elastic
+from repro.runtime.fault import StragglerDetector, Supervisor
+
+
+class TestCheckpointer:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {
+            "a": jax.random.normal(k, (16, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree()
+        ck.save(7, tree)
+        assert ck.latest_step() == 7
+        restored = ck.restore(7, tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_save_then_restore(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree(1)
+        ck.save_async(3, tree)
+        ck.wait()
+        step, restored = ck.restore_latest(tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+    def test_crash_mid_save_preserves_previous(self, tmp_path):
+        """A stale .tmp dir must not corrupt LATEST."""
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree(2)
+        ck.save(1, tree)
+        os.makedirs(os.path.join(str(tmp_path), "step_2.tmp999"), exist_ok=True)
+        assert ck.latest_step() == 1
+        _, restored = ck.restore_latest(tree)
+        assert restored is not None
+
+    def test_shape_mismatch_detected(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, self._tree())
+        bad = {"a": jnp.zeros((4, 4)), "nested": {"b": jnp.zeros(10, jnp.int32)}}
+        with pytest.raises(ValueError):
+            ck.restore(1, bad)
+
+
+class TestSupervisor:
+    def test_restart_after_injected_failure(self, tmp_path):
+        """A mid-run failure restores the last checkpoint and replays."""
+        ck = Checkpointer(str(tmp_path))
+
+        def step_fn(state, batch):
+            return {"x": state["x"] + batch}, {"loss": float(state["x"])}
+
+        def batch_fn(step):
+            return jnp.asarray(1.0)
+
+        failed = {"done": False}
+
+        def inject(step):
+            if step == 7 and not failed["done"]:
+                failed["done"] = True
+                raise RuntimeError("simulated node failure")
+
+        sup = Supervisor(ck, save_every=5)
+        state, hist = sup.run(
+            step_fn, {"x": jnp.asarray(0.0)}, batch_fn, 0, 10, inject_failure=inject
+        )
+        # deterministic replay: final state == 10 regardless of the failure
+        assert float(state["x"]) == 10.0
+        steps = [s for s, _ in hist]
+        assert steps[-1] == 9 and 7 in steps
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(window=16, threshold=2.0)
+        for _ in range(10):
+            assert not det.observe(0.1)
+        assert det.observe(0.5)  # 5x median
+        assert det.flags == 1
+
+
+class TestElastic:
+    def test_plan_mesh_preserves_model_axis(self):
+        (data, model), names = elastic.plan_mesh(96, 16)
+        assert model == 16 and data == 6
+        with pytest.raises(ValueError):
+            elastic.plan_mesh(8, 16)
+
+    def test_remesh_and_reshard_on_host(self):
+        devs = jax.devices()
+        mesh = elastic.remesh(devs, 1)
+        params = {"mlp": {"up": {"w": jnp.ones((8, 4))}}}
+        out = elastic.reshard_state(params, mesh)
+        np.testing.assert_array_equal(np.asarray(out["mlp"]["up"]["w"]), np.ones((8, 4)))
+
+
+class TestGradientCompression:
+    def test_compress_decompress_error_feedback(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+        err = jnp.zeros_like(g)
+        q, scale, err2 = compression.compress(g, err)
+        assert q.dtype == jnp.int8
+        deq = compression.decompress(q, scale, g.shape, (-1000) % compression.BLOCK)
+        # quantization error captured by the feedback buffer
+        np.testing.assert_allclose(np.asarray(deq + err2), np.asarray(g), atol=1e-6)
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """Sum of dequantized grads + final error == sum of true grads."""
+        rng = np.random.default_rng(1)
+        err = jnp.zeros((257,), jnp.float32)
+        total_true = np.zeros(257)
+        total_deq = np.zeros(257)
+        for i in range(20):
+            g = jnp.asarray(rng.normal(size=(257,)) * 0.1, jnp.float32)
+            q, scale, err = compression.compress(g, err)
+            deq = compression.decompress(q, scale, g.shape, (-257) % compression.BLOCK)
+            total_true += np.asarray(g)
+            total_deq += np.asarray(deq)
+        np.testing.assert_allclose(total_deq + np.asarray(err), total_true, atol=1e-4)
+
+    def test_compressed_psum_exactness_int32(self):
+        """int8 payload summed in int32 across shards is exact for the
+        shared-scale grid."""
+        import jax
+
+        def f(g, err):
+            return compression.compressed_psum(g, err, "i")
+
+        g = jnp.stack([jnp.full((compression.BLOCK,), 0.5), jnp.full((compression.BLOCK,), -0.25)])
+        err = jnp.zeros_like(g)
+        out, _ = jax.vmap(f, axis_name="i")(g, err)
+        np.testing.assert_allclose(np.asarray(out[0]), 0.25, atol=0.01)
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state, m = adamw.apply(grads, state, params, lr=0.1, weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.2
+
+    def test_grad_clipping(self):
+        g, norm = adamw.clip_by_global_norm({"w": jnp.full((4,), 100.0)}, 1.0)
+        assert float(norm) > 100
+        assert abs(float(adamw.global_norm(g)) - 1.0) < 1e-5
+
+
+class TestDataPipeline:
+    def test_deterministic_replay(self):
+        from repro.configs import ShapeCell, get_config, reduced
+        from repro.data import DataConfig, make_batch
+
+        cfg = reduced(get_config("olmo-1b"))
+        cell = ShapeCell("t", 64, 4, "train")
+        dcfg = DataConfig(vocab=cfg.vocab, global_batch=4, seq_len=64)
+        a = make_batch(cfg, cell, dcfg, step=17)
+        b = make_batch(cfg, cell, dcfg, step=17)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = make_batch(cfg, cell, dcfg, step=18)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_prefetch_iterator(self):
+        from repro.configs import ShapeCell, get_config, reduced
+        from repro.data import DataConfig, PrefetchIterator, make_batch
+
+        cfg = reduced(get_config("olmo-1b"))
+        cell = ShapeCell("t", 32, 2, "train")
+        dcfg = DataConfig(vocab=cfg.vocab, global_batch=2, seq_len=32)
+        it = PrefetchIterator(cfg, cell, dcfg)
+        step, batch = next(it)
+        want = make_batch(cfg, cell, dcfg, step)
+        np.testing.assert_array_equal(batch["tokens"], want["tokens"])
+        it.close()
+
+
+class TestHloAnalysis:
+    def test_exact_on_nested_scan(self):
+        from repro.deploy.hlo_analysis import analyze_hlo
+
+        def model(params, x):
+            def outer(x, _):
+                def body(x, w):
+                    return jnp.tanh(x @ w), None
+
+                x, _ = jax.lax.scan(body, x, params)
+                return x, None
+
+            x, _ = jax.lax.scan(outer, x, None, length=3)
+            return x.sum()
+
+        params = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+        c = jax.jit(model).lower(params, x).compile()
+        r = analyze_hlo(c.as_text())
+        want = 2 * 32 * 128 * 128 * 6 * 3
+        assert abs(r["flops"] - want) / want < 1e-6
+
+
+class TestShardingRules:
+    def test_param_specs(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.sharding import spec_for_param
+
+        assert spec_for_param("layers/attn/wqkv/w", 3) == P(None, None, "model")
+        assert spec_for_param("layers/mlp/down/w_q", 3) == P(None, "model", None)
+        assert spec_for_param("layers/mlp/experts/gate_q", 4) == P(None, "model", None, None)
+        assert spec_for_param("embed/table", 2) == P("model", None)
+        assert spec_for_param("layers/norm1/g_q", 2) == P()
+
+    def test_fsdp_adds_data_axis(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.sharding import spec_for_param
+
+        assert spec_for_param("layers/attn/wqkv/w", 3, fsdp=True) == P(None, "data", "model")
+        assert spec_for_param("layers/attn/wo/w", 3, fsdp=True) == P(None, "model", "data")
+
+    def test_sanitize_drops_nondivisible(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime.sharding import sanitize_spec
+
+        mesh = make_host_mesh(1, 1)
+        # 'data' axis size 1 always divides; fake larger via spec check on odd dim
+        s = sanitize_spec(mesh, P("data", None), (7, 3))
+        assert s == P("data", None) or s == P(None, None)
