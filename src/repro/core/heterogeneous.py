@@ -11,6 +11,13 @@ module holds the runtime registry and the geometric support predicate the
 planner queries — the direct analogue of Deeploy's accelerator model
 ("first, the accelerator model must specify the geometrical tiling
 constraints for operators it can run").
+
+``DEFAULT_TABLE`` is populated at import time from the kernel packages:
+every op kind the plan executor (``repro.deploy.executor``) can schedule
+has a CLUSTER fallback (XLA integer kernels), and the accelerated kinds
+additionally carry per-backend ACCELERATOR implementations — the
+paper-faithful XLA arithmetic for ``Backend.W8A8`` and the Pallas kernels
+for ``Backend.ITA``.
 """
 
 from __future__ import annotations
@@ -59,11 +66,20 @@ def ita_supports(op: OpDesc, granule: int = ITA_GRANULE) -> bool:
     The ASIC requires int8 operands and 64-aligned dims; dims beyond 512
     are handled by *tiling*, so only alignment matters here.  Non-int8 or
     unsupported kinds fall back to the cluster.
+
+    MHA is special-cased: the single-head datapath fixes the P dimension
+    at the ITA granule (the paper's P=64 vector length) regardless of the
+    host granule — the attention runner pads the sequence itself, so only
+    the head dim gates acceptance.
     """
     if op.kind not in ACCEL_KINDS:
         return False
     if op.dtype != "int8":
         return False
+    if op.kind == "mha":
+        # shapes = ((seq, head_dim),): seq is padded by the runner/tiler,
+        # head_dim must match the single-head datapath width.
+        return all(s[-1] % ITA_GRANULE == 0 for s in op.shapes)
     for shape in op.shapes:
         for d in shape[-2:]:  # contracting/output dims must be aligned
             if d % granule != 0:
@@ -73,21 +89,213 @@ def ita_supports(op: OpDesc, granule: int = ITA_GRANULE) -> bool:
 
 @dataclasses.dataclass
 class DispatchTable:
-    """Runtime registry: op kind -> {engine -> callable}."""
+    """Runtime registry: op kind -> {engine -> callable}.
+
+    ``register(..., backend=...)`` installs a backend-specific override —
+    the mechanism by which the accelerator slot holds the paper-faithful
+    XLA arithmetic under ``Backend.W8A8`` and the Pallas kernel under
+    ``Backend.ITA`` simultaneously.
+    """
 
     table: dict[str, dict[Engine, Callable]] = dataclasses.field(default_factory=dict)
+    overrides: dict[tuple[str, Engine, Backend], Callable] = dataclasses.field(
+        default_factory=dict
+    )
 
-    def register(self, kind: str, engine: Engine, fn: Callable) -> None:
-        self.table.setdefault(kind, {})[engine] = fn
+    def register(
+        self, kind: str, engine: Engine, fn: Callable, backend: Backend | None = None
+    ) -> None:
+        if backend is None:
+            self.table.setdefault(kind, {})[engine] = fn
+        else:
+            self.table.setdefault(kind, {})
+            self.overrides[(kind, engine, backend)] = fn
+
+    def kinds(self) -> set[str]:
+        return set(self.table)
+
+    def _lookup(self, kind: str, engine: Engine, backend: Backend) -> Callable:
+        fn = self.overrides.get((kind, engine, backend))
+        if fn is None:
+            fn = self.table[kind][engine]
+        return fn
+
+    def _has_accelerator(self, kind: str, backend: Backend) -> bool:
+        return Engine.ACCELERATOR in self.table.get(kind, {}) or (
+            (kind, Engine.ACCELERATOR, backend) in self.overrides
+        )
 
     def resolve(self, op: OpDesc, backend: Backend) -> tuple[Engine, Callable]:
-        entry = self.table[op.kind]
         if backend is Backend.FLOAT:
-            return Engine.CLUSTER, entry[Engine.CLUSTER]
+            return Engine.CLUSTER, self._lookup(op.kind, Engine.CLUSTER, backend)
         granule = TPU_GRANULE if backend is Backend.ITA else ITA_GRANULE
-        if ita_supports(op, granule) and Engine.ACCELERATOR in entry:
-            return Engine.ACCELERATOR, entry[Engine.ACCELERATOR]
-        return Engine.CLUSTER, entry[Engine.CLUSTER]
+        if ita_supports(op, granule) and self._has_accelerator(op.kind, backend):
+            return Engine.ACCELERATOR, self._lookup(op.kind, Engine.ACCELERATOR, backend)
+        return Engine.CLUSTER, self._lookup(op.kind, Engine.CLUSTER, backend)
 
 
 DEFAULT_TABLE = DispatchTable()
+
+
+def _pick_block(dim: int, prefs: tuple[int, ...] = (512, 256, 128)) -> int:
+    """Largest preferred Pallas block dividing ``dim`` (whole dim otherwise)."""
+    for p in prefs:
+        if dim % p == 0:
+            return p
+    return dim
+
+
+def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
+    """Fill a dispatch table from the kernel packages + XLA fallbacks.
+
+    Called at import time on ``DEFAULT_TABLE`` (the plan is only as real
+    as its runnable kernels), so importing this module pulls in jax and
+    the kernel packages; the imports stay local to keep the module's
+    declarations usable before population.  Registered callables have one
+    uniform signature per kind (the plan executor prepares arguments
+    once, whatever the engine):
+
+      gemm:       fn(x, w, b, *, scales, act, s_preact) -> int8
+      mha:        fn(qh, kh, vh, *, s_act, s_out) -> int8  [B, H, S, D]
+      softmax:    fn(logits_q) -> int8
+      gelu:       fn(x_q, *, s_in, s_out) -> int8
+      layernorm:  fn(kind, pq, x_q, s_gamma, s_out) -> int8
+      add:        fn(a_q, b_q, *, scales) -> int8
+      headaccum:  fn(parts, bias_q, *, scales) -> int8
+      embed:      fn(table_q, tokens) -> int8
+      classifier: fn(h_q, table_q, *, scale) -> float32
+      dequant:    fn(h_q, *, scale) -> float32
+    """
+    table = DEFAULT_TABLE if table is None else table
+
+    import jax.numpy as jnp
+
+    from repro.core import itamax as im
+    from repro.core.attention import MhaQParams, attention_rowwise_i8
+    from repro.core.igelu import igelu_int, make_igelu_params
+    from repro.core.quant_linear import ACT_IDENTITY, make_qlinear_params, qlinear_i8
+    from repro.kernels import igelu as igelu_pallas
+    from repro.kernels import int8_gemm as int8_gemm_pallas
+    from repro.kernels import ita_attention as ita_attention_pallas
+    from repro.models import layers as L
+    from repro.quant.qparams import make_qparams, requantize
+
+    # -- gemm: ITA's GEMM mode (int8 matmul + bias + requant + activation)
+    def _gemm_xla(x_q, w_q, b_q, *, scales, act=ACT_IDENTITY, s_preact=None):
+        s_in, s_w, s_out = scales
+        return qlinear_i8(x_q, w_q, b_q, make_qlinear_params(s_in, s_w, s_out, act, s_preact))
+
+    def _gemm_ita(x_q, w_q, b_q, *, scales, act=ACT_IDENTITY, s_preact=None):
+        s_in, s_w, s_out = scales
+        *lead, k = x_q.shape
+        m = 1
+        for d in lead:
+            m *= d
+        n = w_q.shape[1]
+        if m % TPU_GRANULE == 0:
+            bm, pad = _pick_block(m, (256, 128)), 0
+        else:
+            # pad rows up to the MXU granule (zero rows, exact: they are
+            # sliced away after the requant) — unaligned block_m would not
+            # compile on real TPUs even though interpret mode accepts it
+            bm = TPU_GRANULE
+            pad = bm - m % bm
+        x2 = x_q.reshape(m, k)
+        if pad:
+            x2 = jnp.concatenate([x2, jnp.zeros((pad, k), x_q.dtype)], axis=0)
+        out = int8_gemm_pallas(
+            x2, w_q, b_q, s_in=s_in, s_w=s_w, s_out=s_out, act=act, s_preact=s_preact,
+            block_m=bm, block_n=_pick_block(n), block_k=_pick_block(k),
+        )
+        if pad:
+            out = out[:m]
+        return out.reshape(*lead, n)
+
+    table.register("gemm", Engine.CLUSTER, _gemm_xla)
+    table.register("gemm", Engine.ACCELERATOR, _gemm_xla, backend=Backend.W8A8)
+    table.register("gemm", Engine.ACCELERATOR, _gemm_ita, backend=Backend.ITA)
+
+    # -- mha: the fused attention core (projections dispatch as gemm)
+    def _mha_xla(qh, kh, vh, *, s_act, s_out):
+        p = MhaQParams.make(s_act, s_act, s_act, s_out, qh.shape[-1])
+        return attention_rowwise_i8(qh, kh, vh, p)
+
+    def _mha_ita(qh, kh, vh, *, s_act, s_out):
+        # Pallas kernel wants 128-aligned sequence tiles; pad + mask the
+        # KV tail (same recipe as the model-level ita backend).
+        sq = qh.shape[2]
+        pad = (-sq) % TPU_GRANULE
+        if pad:
+            qh = jnp.pad(qh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = ita_attention_pallas(
+            qh, kh, vh, s_q=s_act, s_k=s_act, s_v=s_act, s_out=s_out,
+            block_q=TPU_GRANULE, block_k=TPU_GRANULE, kv_valid=sq if pad else None,
+        )
+        return out[:, :, :sq] if pad else out
+
+    table.register("mha", Engine.CLUSTER, _mha_xla)
+    table.register("mha", Engine.ACCELERATOR, _mha_xla, backend=Backend.W8A8)
+    table.register("mha", Engine.ACCELERATOR, _mha_ita, backend=Backend.ITA)
+
+    # -- softmax: standalone rowwise ITAMax, cluster only — like the ASIC,
+    # the ITAMax unit accelerates softmax only inside the MHA datapath
+    # ("softmax" is deliberately absent from ACCEL_KINDS)
+    table.register("softmax", Engine.CLUSTER, im.itamax_rowwise)
+
+    # -- gelu: standalone i-GeLU (survives only when the producing GEMM
+    # was not accelerated, so the epilogue fusion could not fold it)
+    def _igelu_xla(x_q, *, s_in: float, s_out: float):
+        gp = make_igelu_params(s_in)
+        qp = make_qparams(gp.out_scale, 1.0, s_out)
+        return requantize(igelu_int(x_q, gp), qp.mult, qp.shift)
+
+    def _igelu_ita(x_q, *, s_in: float, s_out: float):
+        return igelu_pallas(x_q, in_scale=s_in, out_scale=s_out)
+
+    table.register("gelu", Engine.CLUSTER, _igelu_xla)
+    table.register("gelu", Engine.ACCELERATOR, _igelu_xla, backend=Backend.W8A8)
+    table.register("gelu", Engine.ACCELERATOR, _igelu_ita, backend=Backend.ITA)
+
+    # -- cluster-only auxiliaries (the paper's Snitch fallback kernels)
+    table.register("layernorm", Engine.CLUSTER, L.norm_apply_i8)
+
+    def _iadd(a_q, b_q, *, scales):
+        return L.iadd_i8(a_q, b_q, *L.make_iadd_params(*scales))
+
+    table.register("add", Engine.CLUSTER, _iadd)
+    table.register("embed", Engine.CLUSTER, lambda table_q, tokens: table_q[tokens])
+
+    def _head_accum(parts, bias_q, *, scales):
+        # exact model-path arithmetic: int32 sum of the per-head partial
+        # output projections, one requant, then the bias fold-in
+        s_in, s_w, s_out = scales
+        acc = jnp.asarray(parts[0], jnp.int32)
+        for p in parts[1:]:
+            acc = acc + jnp.asarray(p, jnp.int32)
+        qp_o = make_qparams(s_in, s_w, s_out)
+        out = requantize(acc, qp_o.mult, qp_o.shift)
+        if bias_q is not None:
+            qb = make_qparams(s_in, 1.0, s_out)
+            out = requantize(
+                jnp.asarray(out, jnp.int32) + requantize(bias_q, qp_o.mult, qp_o.shift),
+                qb.mult, qb.shift,
+            )
+        return out
+
+    table.register("headaccum", Engine.CLUSTER, _head_accum)
+
+    def _classifier(h_q, table_q, *, scale: float):
+        acc = jnp.matmul(
+            h_q.astype(jnp.int8), table_q.astype(jnp.int8).T,
+            preferred_element_type=jnp.int32,
+        )
+        return acc.astype(jnp.float32) * scale
+
+    table.register("classifier", Engine.CLUSTER, _classifier)
+    table.register("dequant", Engine.CLUSTER, lambda h_q, *, scale: h_q.astype(jnp.float32) * scale)
+    return table
+
+
+populate_default_table(DEFAULT_TABLE)

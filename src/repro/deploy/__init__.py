@@ -4,6 +4,22 @@ graph -> patterns (MHA fusion, head split, engine mapping) -> tiler
 (geometric constraints) -> memory (static layout) -> costmodel
 (calibrated Snitch+ITA cycles/energy).  ``hlo_analysis`` is the TPU-side
 "profiler" reading compiled dry-run artifacts.
+
+The executable half: ``lowering`` compiles an ArchConfig through the pass
+pipeline into a serializable ``plan.DeploymentPlan``; ``executor`` runs
+the plan as a jitted JAX function, resolving every node through the
+runtime DispatchTable (Pallas kernels on the accelerator engine, XLA
+fallbacks on the cluster).
 """
 
-from repro.deploy import costmodel, graph, hlo_analysis, memory, patterns, tiler  # noqa: F401
+from repro.deploy import (  # noqa: F401
+    costmodel,
+    executor,
+    graph,
+    hlo_analysis,
+    lowering,
+    memory,
+    patterns,
+    plan,
+    tiler,
+)

@@ -156,6 +156,9 @@ def _node_ops(n) -> float:
         return n.attrs["heads"] * mha_head_ops(
             n.attrs["seq"], n.attrs["head_dim"], n.attrs["d_model"]
         )
+    if n.op == "Classifier":  # runtime-graph MLM head: int8 matmul, cluster
+        m, k, nn = n.attrs["dims"]
+        return 2.0 * m * k * nn
     if n.op in ("LayerNorm", "Softmax", "GELU", "Add", "HeadAccum"):
         dims = n.attrs["dims"]
         e = 1
@@ -168,6 +171,8 @@ def _node_ops(n) -> float:
 
 def _aux_elems(n) -> float:
     dims = n.attrs.get("dims", ())
+    if n.op == "Classifier":  # per-output-element orchestration, not per-MAC
+        return float(dims[0] * dims[2])
     e = 1
     for d in dims:
         e *= d

@@ -1,0 +1,317 @@
+"""Plan executor — runs a DeploymentPlan as a jitted JAX function.
+
+The closing of the deploy loop: every scheduled node resolves through the
+runtime :class:`~repro.core.heterogeneous.DispatchTable`, so accelerator
+nodes hit the Pallas kernels (``Backend.ITA``) or the paper-faithful XLA
+integer arithmetic (``Backend.W8A8``), and cluster nodes always hit the
+XLA fallback kernels — exactly as ``ita_supports`` decides.
+
+Bit-exactness contract: ``execute(plan, bind_encoder_weights(...), batch,
+backend=Backend.W8A8)`` equals ``repro.models.encoder.forward_w8a8`` on
+the same quantized params, element for element.  The integer arithmetic
+is column-separable, so the plan's sliced Q/K/V projections reproduce the
+model's fused QKV GEMM exactly; the per-head schedule reproduces the
+``ita_head_by_head`` branch the same way.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.heterogeneous import (
+    DEFAULT_TABLE,
+    ITA_GRANULE,
+    TPU_GRANULE,
+    Backend,
+    DispatchTable,
+    OpDesc,
+)
+from repro.core.quant_linear import ACT_GELU, ACT_IDENTITY
+from repro.deploy.plan import DeploymentPlan, PlanNode
+
+
+def _backend_granule(backend: Backend) -> int:
+    return TPU_GRANULE if backend is Backend.ITA else ITA_GRANULE
+
+
+def _ceil_to(d: int, g: int) -> int:
+    return math.ceil(d / g) * g
+
+
+def _gemm_desc(m: int, k: int, n: int, granule: int, act: str = "identity") -> OpDesc:
+    return OpDesc("gemm", shapes=((_ceil_to(m, granule), k), (k, n)), act=act)
+
+
+def _mha_desc(seq: int, head_dim: int, granule: int) -> OpDesc:
+    return OpDesc("mha", shapes=((_ceil_to(seq, granule), head_dim),))
+
+
+def _resolve(table: DispatchTable, desc: OpDesc, backend: Backend) -> Callable:
+    return table.resolve(desc, backend)[1]
+
+
+# ---------------------------------------------------------------------------
+# Per-kind runners
+# ---------------------------------------------------------------------------
+
+def _run_gemm(node: PlanNode, env, table, backend):
+    if "heads" in node.attrs:
+        raise NotImplementedError(
+            f"{node.name}: un-fused attention MatMul cannot execute; lower with "
+            "fuse_mha (deploy_pipeline) so attention runs as an MHA node"
+        )
+    x, w = env[node.inputs[0]], env[node.inputs[1]]
+    b = env[node.inputs[2]] if len(node.inputs) > 2 else None
+    m, k, n = node.attrs["dims"]
+    act = ACT_GELU if node.attrs.get("activation") == "gelu" else ACT_IDENTITY
+    scales = node.attrs["scales"]
+    s_preact = node.attrs.get("s_preact")
+    if act == ACT_GELU and s_preact is None:
+        s_preact = scales[2]
+    g = _backend_granule(backend)
+    fn = _resolve(table, _gemm_desc(m, k, n, g, node.attrs.get("activation", "identity")), backend)
+    return fn(x, w, b, scales=tuple(scales), act=act, s_preact=s_preact)
+
+
+def _split(x, heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _attention_core(node, qh, kh, vh, table, backend):
+    proj = node.attrs["proj_scales"]
+    outp = node.attrs["out_scales"]
+    fn = _resolve(
+        table, _mha_desc(node.attrs["seq"], node.attrs["head_dim"], _backend_granule(backend)),
+        backend,
+    )
+    return fn(qh, kh, vh, s_act=proj[2], s_out=outp[0])
+
+
+def _mha_weights(node: PlanNode, env):
+    wq, wk, wv, wo = (env[t] for t in node.inputs[1:5])
+    if node.attrs.get("has_bias"):
+        bq, bk, bv, bo = (env[t] for t in node.inputs[5:9])
+    else:
+        bq = bk = bv = bo = None
+    return wq, wk, wv, wo, bq, bk, bv, bo
+
+
+def _run_mha(node: PlanNode, env, table, backend):
+    """Fused MHA: QKV projections -> attention core -> output projection."""
+    x = env[node.inputs[0]]
+    wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
+    s, e = node.attrs["seq"], node.attrs["d_model"]
+    h, hkv, hd = node.attrs["heads"], node.attrs["kv_heads"], node.attrs["head_dim"]
+    proj = tuple(node.attrs["proj_scales"])
+    outp = tuple(node.attrs["out_scales"])
+    g = _backend_granule(backend)
+
+    gemm_q = _resolve(table, _gemm_desc(s, e, h * hd, g), backend)
+    gemm_kv = _resolve(table, _gemm_desc(s, e, hkv * hd, g), backend)
+    q = gemm_q(x, wq, bq, scales=proj, act=ACT_IDENTITY, s_preact=None)
+    k = gemm_kv(x, wk, bk, scales=proj, act=ACT_IDENTITY, s_preact=None)
+    v = gemm_kv(x, wv, bv, scales=proj, act=ACT_IDENTITY, s_preact=None)
+
+    a = _attention_core(node, _split(q, h, hd), _split(k, hkv, hd), _split(v, hkv, hd),
+                        table, backend)
+    a_m = a.transpose(0, 2, 1, 3).reshape(*x.shape[:2], h * hd)
+    gemm_o = _resolve(table, _gemm_desc(s, h * hd, e, g), backend)
+    return gemm_o(a_m, wo, bo, scales=outp, act=ACT_IDENTITY, s_preact=None)
+
+
+def _run_mha_head(node: PlanNode, env, table, backend):
+    """One head of the paper schedule: per-head Q/K/V projection slices,
+    single-head attention, *raw int32* partial output projection (the
+    cluster HeadAccum requantizes once after summing all heads)."""
+    x = env[node.inputs[0]]
+    wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
+    s, e = node.attrs["seq"], node.attrs["d_model"]
+    h, hkv, hd = node.attrs["heads"], node.attrs["kv_heads"], node.attrs["head_dim"]
+    head = node.attrs["head"]
+    kvh = head // (h // hkv)
+    proj = tuple(node.attrs["proj_scales"])
+    g = _backend_granule(backend)
+
+    def slc(w, b, idx):
+        lo = idx * hd
+        return w[:, lo : lo + hd], None if b is None else b[lo : lo + hd]
+
+    gemm_h = _resolve(table, _gemm_desc(s, e, hd, g), backend)
+    q1 = gemm_h(x, *slc(wq, bq, head), scales=proj, act=ACT_IDENTITY, s_preact=None)
+    k1 = gemm_h(x, *slc(wk, bk, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
+    v1 = gemm_h(x, *slc(wv, bv, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
+
+    a1 = _attention_core(node, q1[:, None], k1[:, None], v1[:, None], table, backend)
+    wo_h = wo[head * hd : (head + 1) * hd, :]
+    return jnp.matmul(a1[:, 0], wo_h, preferred_element_type=jnp.int32)
+
+
+def _run_node(node: PlanNode, env, table, backend):
+    kind = node.kind
+    a = node.attrs
+    if kind == "gemm":
+        return _run_gemm(node, env, table, backend)
+    if kind == "mha":
+        if node.op == "MHAHead":
+            return _run_mha_head(node, env, table, backend)
+        return _run_mha(node, env, table, backend)
+    # cluster-only kinds resolve with the node's own shape description
+    desc = OpDesc(kind, shapes=(tuple(a.get("dims", ())),))
+    fn = _resolve(table, desc, backend)
+    if kind == "layernorm":
+        pq = {}
+        params = list(node.inputs[1:])
+        if a["norm"] != "np_layernorm" and params:
+            pq["g_q"] = env[params[0]]
+        if a["norm"] == "layernorm" and len(params) > 1:
+            pq["beta_q"] = env[params[1]]
+        return fn(a["norm"], pq, env[node.inputs[0]], a["s_gamma"], a["s_out"])
+    if kind == "add":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], scales=tuple(a["scales"]))
+    if kind == "gelu":
+        s_in, s_out = a["scales"]
+        return fn(env[node.inputs[0]], s_in=s_in, s_out=s_out)
+    if kind == "embed":
+        return fn(env[node.inputs[0]], env[node.inputs[1]])
+    if kind == "headaccum":
+        h = a["heads"]
+        parts = [env[t] for t in node.inputs[:h]]
+        bias = env[node.inputs[h]] if len(node.inputs) > h else None
+        return fn(parts, bias, scales=tuple(a["out_scales"]))
+    if kind == "classifier":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], scale=a["scale"])
+    if kind == "dequant":
+        return fn(env[node.inputs[0]], scale=a["scale"])
+    raise NotImplementedError(f"no runner for op kind {kind!r} ({node.op})")
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def execute(
+    plan: DeploymentPlan,
+    weights: dict,
+    batch: dict,
+    *,
+    backend: Backend = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """Run one forward pass of the plan (trace-compatible: jit freely).
+
+    ``batch`` maps the plan's input names (``tokens`` / ``patches`` /
+    ``frames``) to arrays with a leading batch dim; every runner
+    broadcasts over that dim exactly like the model path.
+    """
+    table = DEFAULT_TABLE if table is None else table
+    env = dict(weights)
+    for name in plan.inputs:
+        env[name] = batch[name]
+    for node in plan.nodes:
+        out = _run_node(node, env, table, backend)
+        env[node.outputs[0]] = out
+    outs = [env[name] for name in plan.outputs]
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def make_jit_executor(
+    plan: DeploymentPlan,
+    *,
+    backend: Backend = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """jit-compiled closure over the (static) plan: fn(weights, batch)."""
+
+    def fn(weights, batch):
+        return execute(plan, weights, batch, backend=backend, table=table)
+
+    return jax.jit(fn)
+
+
+def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dict:
+    """Map plan weight names onto the model's quantized param pytree.
+
+    ``qp`` is ``repro.models.encoder.quantize_params`` output (stacked
+    layers from vmap).  The fused ``wqkv`` weight/bias is column-sliced
+    into the plan's wq/wk/wv tensors — bit-identical to the fused GEMM.
+    """
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qd, kd = h * hd, hkv * hd
+    weights: dict = {}
+
+    def put(name, arr):
+        if arr is not None:
+            weights[name] = arr
+
+    def put_norm(prefix, pq):
+        put(prefix + "_g", pq.get("g_q"))
+        put(prefix + "_b", pq.get("beta_q"))
+
+    for l in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[l], qp["layers"])
+        pre = f"l{l}_"
+        wqkv, bqkv = lp["attn"]["wqkv"]["w_q"], lp["attn"]["wqkv"].get("b_q")
+        put(pre + "wq", wqkv[:, :qd])
+        put(pre + "wk", wqkv[:, qd : qd + kd])
+        put(pre + "wv", wqkv[:, qd + kd : qd + 2 * kd])
+        if bqkv is not None:
+            put(pre + "wq_b", bqkv[:qd])
+            put(pre + "wk_b", bqkv[qd : qd + kd])
+            put(pre + "wv_b", bqkv[qd + kd : qd + 2 * kd])
+        put(pre + "wo", lp["attn"]["wo"]["w_q"])
+        put(pre + "wo_b", lp["attn"]["wo"].get("b_q"))
+        put_norm(pre + "norm1", lp["norm1"])
+        put_norm(pre + "norm2", lp["norm2"])
+        put(pre + "up", lp["mlp"]["up"]["w_q"])
+        put(pre + "up_b", lp["mlp"]["up"].get("b_q"))
+        put(pre + "down", lp["mlp"]["down"]["w_q"])
+        put(pre + "down_b", lp["mlp"]["down"].get("b_q"))
+
+    put("pos", qp["pos_q"][: plan.seq_len])
+    put_norm("final_norm", qp["final_norm"])
+    if "embed" in qp:
+        put("embed_table", qp["embed"]["table_q"])
+
+    bound = {k: v for k, v in weights.items() if k in plan.tensors and plan.tensors[k].weight}
+    missing = [t for t in plan.weight_names if t not in bound]
+    if missing:
+        raise KeyError(f"plan weights without a bound param: {missing[:8]}")
+    return bound
+
+
+def plan_and_bind(
+    cfg: ArchConfig,
+    seq_len: int | None = None,
+    *,
+    key=None,
+    params: dict | None = None,
+    head_by_head: bool = False,
+    include_head: bool = True,
+    backend: Backend = Backend.W8A8,
+):
+    """Convenience: float init -> PTQ quantize -> lower -> bind.
+
+    The plan's static engine mapping is solved at the granule of the
+    execution ``backend`` (64 for the ASIC-faithful W8A8 arithmetic, 128
+    for the Pallas/TPU kernels), so the plan's engine column matches what
+    ``DispatchTable.resolve`` will actually do at run time.
+
+    Returns ``(plan, weights, qp)`` so callers can also run the reference
+    ``forward_w8a8`` on the identical quantized params.
+    """
+    from repro.deploy.lowering import lower
+    from repro.models import encoder as EN
+
+    if params is None:
+        key = jax.random.PRNGKey(0) if key is None else key
+        params = EN.init_params(cfg, key)
+    qp = EN.quantize_params(cfg, params)
+    plan = lower(cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
+                 granule=_backend_granule(backend))
+    return plan, bind_encoder_weights(plan, cfg, qp), qp

@@ -37,13 +37,44 @@ class Node:
     engine: str | None = None  # "ita" | "cluster" (set by the mapper)
 
 
-@dataclass
 class Graph:
-    nodes: list[Node] = field(default_factory=list)
-    tensors: dict[str, TensorInfo] = field(default_factory=dict)
-    inputs: list[str] = field(default_factory=list)
-    outputs: list[str] = field(default_factory=list)
-    weights: set = field(default_factory=set)  # tensor names resident in L2
+    """Operator graph with O(1) producer/consumer lookup.
+
+    ``nodes`` is a property: appending via :meth:`add_node` updates the
+    producer/consumer indexes incrementally, and wholesale replacement
+    (``g.nodes = new_nodes`` — what the rewrite passes do) rebuilds them.
+    The passes call :meth:`producer_of`/:meth:`consumers_of` inside node
+    loops, so without the indexes deep graphs go O(n²).
+    """
+
+    def __init__(self, nodes=None, tensors=None, inputs=None, outputs=None, weights=None):
+        self.tensors = tensors or {}
+        self.inputs = inputs or []
+        self.outputs = outputs or []
+        self.weights = weights or set()
+        self._nodes = []
+        self._producer = {}
+        self._consumers = {}
+        if nodes:
+            self.nodes = list(nodes)
+
+    @property
+    def nodes(self) -> list[Node]:
+        return self._nodes
+
+    @nodes.setter
+    def nodes(self, new_nodes: list[Node]) -> None:
+        self._nodes = list(new_nodes)
+        self._producer = {}
+        self._consumers = {}
+        for n in self._nodes:
+            self._index_node(n)
+
+    def _index_node(self, node: Node) -> None:
+        for t in node.outputs:
+            self._producer[t] = node
+        for t in node.inputs:
+            self._consumers.setdefault(t, []).append(node)
 
     def add_tensor(self, name, shape, dtype="int8", weight=False) -> str:
         self.tensors[name] = TensorInfo(name, tuple(shape), dtype)
@@ -52,18 +83,16 @@ class Graph:
         return name
 
     def add_node(self, op, inputs, outputs, name=None, **attrs) -> Node:
-        node = Node(name or f"{op}_{len(self.nodes)}", op, list(inputs), list(outputs), attrs)
-        self.nodes.append(node)
+        node = Node(name or f"{op}_{len(self._nodes)}", op, list(inputs), list(outputs), attrs)
+        self._nodes.append(node)
+        self._index_node(node)
         return node
 
     def producer_of(self, tensor: str) -> Node | None:
-        for n in self.nodes:
-            if tensor in n.outputs:
-                return n
-        return None
+        return self._producer.get(tensor)
 
     def consumers_of(self, tensor: str) -> list[Node]:
-        return [n for n in self.nodes if tensor in n.inputs]
+        return list(self._consumers.get(tensor, ()))
 
     def validate(self):
         produced = set(self.inputs) | set(self.weights)

@@ -140,6 +140,38 @@ def _multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
     return mult
 
 
+def _operand_types(comp: Computation, rhs: str, op: str) -> list[str]:
+    """Type strings of an op's operands, robust to both HLO spellings:
+    bare references (``dot(%a, %b)``, resolved through the symbol table)
+    and inline-typed references (``dot(f32[32,128]{1,0} %a, ...)``)."""
+    m = re.search(re.escape(op) + r"\(([^)]*)\)", rhs)
+    if not m:
+        return []
+    parts, depth, cur = [], 0, ""
+    for ch in m.group(1):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur.strip())
+    types = []
+    for o in parts:
+        inline = _SHAPE_RE.search(o.split("%")[0]) if "%" in o else _SHAPE_RE.search(o)
+        if inline:
+            types.append(inline.group(0))
+            continue
+        nm = re.search(r"%([\w.\-]+)", o)
+        types.append(comp.symbols.get("%" + nm.group(1), "") if nm else
+                     comp.symbols.get(o, ""))
+    return types
+
+
 def _dot_flops(comp: Computation, line: str) -> float:
     d = _DEF_RE.match(line)
     if not d:
@@ -152,11 +184,8 @@ def _dot_flops(comp: Computation, line: str) -> float:
     n_res = 1
     for x in result_dims:
         n_res *= x
-    # operands
-    args = re.search(r"dot\(([^)]*)\)", rhs)
-    lhs_name = args.group(1).split(",")[0].strip() if args else None
-    lhs_type = comp.symbols.get(lhs_name, "")
-    lhs_dims, _ = _dims(lhs_type)
+    operands = _operand_types(comp, rhs, "dot")
+    lhs_dims, _ = _dims(operands[0] if operands else "")
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     contraction = 1
     if cm and lhs_dims:
@@ -195,18 +224,16 @@ def analyze_hlo(text: str) -> dict:
             base_op = op.replace("-start", "")
             if base_op in COLLECTIVES:
                 if base_op == "reduce-scatter":
-                    args = re.search(r"\(([^)]*)\)", rhs[rhs.index(op):])
-                    opnd = args.group(1).split(",")[0].strip() if args else None
-                    b = _tuple_bytes(comp.symbols.get(opnd, type_str))
+                    operands = _operand_types(comp, rhs, op)
+                    b = _tuple_bytes(operands[0] if operands else type_str)
                 else:
                     b = _tuple_bytes(type_str)
                 coll[base_op] += m * b
                 coll_count[base_op] += 1
             if not comp.fused and op not in SKIP_MEMORY_OPS and not op.endswith("-done"):
                 if op == "dynamic-update-slice":
-                    args = re.search(r"dynamic-update-slice\(([^)]*)\)", rhs)
-                    upd = args.group(1).split(",")[1].strip() if args else None
-                    mem_bytes += m * _tuple_bytes(comp.symbols.get(upd, ""))
+                    operands = _operand_types(comp, rhs, op)
+                    mem_bytes += m * _tuple_bytes(operands[1] if len(operands) > 1 else "")
                 else:
                     mem_bytes += m * _tuple_bytes(type_str)
 

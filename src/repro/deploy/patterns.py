@@ -5,16 +5,71 @@ and fuses it to form a monolithic node in the graph.  This node is then
 split along the head dimension to map the MHA operator head-by-head on
 ITA.  Finally, a head accumulation layer is inserted at the end, which
 runs on the cluster cores."
+
+Engine mapping is driven by :func:`repro.core.heterogeneous.ita_supports`
+via :func:`node_opdesc` — the same predicate the runtime dispatch table
+uses, so the static plan and the executor agree by construction.
 """
 
 from __future__ import annotations
 
+import math
+
 from repro.core.heterogeneous import ITA_GRANULE, OpDesc, ita_supports
 from repro.deploy.graph import Graph, Node
 
+#: graph op -> dispatch kind (the DispatchTable vocabulary)
+KIND_BY_OP = {
+    "MatMul": "gemm",
+    "MHA": "mha",
+    "MHAHead": "mha",
+    "GELU": "gelu",
+    "Softmax": "softmax",
+    "LayerNorm": "layernorm",
+    "Add": "add",
+    "HeadAccum": "headaccum",
+    "Embed": "embed",
+    "Classifier": "classifier",
+    "Dequant": "dequant",
+}
+
+
+def _ceil_to(d: int, g: int) -> int:
+    return math.ceil(d / g) * g
+
+
+def node_opdesc(n: Node, granule: int = ITA_GRANULE) -> OpDesc:
+    """Shape/type description the support predicate sees for one node.
+
+    Row (M) dims are padded to the granule — the tiler pads them with
+    zero rows, which is exact for every op here — while contracting and
+    output dims are reported as-is: weights have fixed compiled layouts,
+    so their alignment genuinely gates acceleration.
+    """
+    kind = KIND_BY_OP.get(n.op, n.op.lower())
+    dims = n.attrs.get("dims", ())
+    if n.op == "MatMul":
+        m, k, nn = dims
+        return OpDesc(kind, shapes=((_ceil_to(m, granule), k), (k, nn)),
+                      act=n.attrs.get("activation", "identity"))
+    if n.op in ("MHA", "MHAHead"):
+        return OpDesc(kind, shapes=((_ceil_to(n.attrs["seq"], granule),
+                                     n.attrs["head_dim"]),))
+    if n.op == "GELU":
+        m = dims[0] if dims else 0
+        rest = tuple(dims[1:]) if len(dims) > 1 else ()
+        return OpDesc(kind, shapes=((_ceil_to(m, granule), *rest),))
+    return OpDesc(kind, shapes=(tuple(dims),) if dims else ())
+
 
 def fuse_mha(g: Graph) -> Graph:
-    """Match [Q,K,V MatMuls -> QK^T -> Softmax -> AV -> O] and fuse to MHA."""
+    """Match [Q,K,V MatMuls -> QK^T -> Softmax -> AV -> O] and fuse to MHA.
+
+    The fused node keeps the projection weights (and biases, when the
+    source MatMuls carry them) as inputs, plus the quantization scales the
+    lowering attached — everything the plan executor needs to run the
+    monolithic operator.
+    """
     new_nodes: list[Node] = []
     consumed: set[str] = set()
     i = 0
@@ -40,12 +95,30 @@ def fuse_mha(g: Graph) -> Graph:
             ):
                 heads = qk.attrs.get("heads", 1)
                 s, e, hp = mq.attrs["dims"]
+                head_dim = hp // heads
+                kv_dim = mk.attrs["dims"][2]
+                inputs = [mq.inputs[0], mq.inputs[1], mk.inputs[1], mv.inputs[1], mo.inputs[1]]
+                has_bias = all(len(m.inputs) > 2 for m in (mq, mk, mv, mo))
+                if has_bias:
+                    inputs += [mq.inputs[2], mk.inputs[2], mv.inputs[2], mo.inputs[2]]
+                attrs = {
+                    "heads": heads,
+                    "seq": s,
+                    "d_model": e,
+                    "head_dim": head_dim,
+                    "kv_heads": kv_dim // head_dim,
+                    "has_bias": has_bias,
+                }
+                if "scales" in mq.attrs:
+                    attrs["proj_scales"] = mq.attrs["scales"]
+                if "scales" in mo.attrs:
+                    attrs["out_scales"] = mo.attrs["scales"]
                 fused = Node(
                     name=f"MHA_{len(new_nodes)}",
                     op="MHA",
-                    inputs=[mq.inputs[0], mq.inputs[1], mk.inputs[1], mv.inputs[1], mo.inputs[1]],
+                    inputs=inputs,
                     outputs=list(mo.outputs),
-                    attrs={"heads": heads, "seq": s, "d_model": e, "head_dim": hp // heads},
+                    attrs=attrs,
                 )
                 new_nodes.append(fused)
                 consumed.update(w.name for w in window)
@@ -58,7 +131,13 @@ def fuse_mha(g: Graph) -> Graph:
 
 
 def split_heads(g: Graph) -> Graph:
-    """MHA -> per-head MHAHead nodes + cluster HeadAccum (ITA is single-head)."""
+    """MHA -> per-head MHAHead nodes + cluster HeadAccum (ITA is single-head).
+
+    Partial outputs are int32: each head computes its slice of the output
+    projection on ITA and the cluster accumulates the raw accumulators —
+    exactly the paper's schedule (requantization happens once, after the
+    accumulation).
+    """
     new_nodes: list[Node] = []
     for n in g.nodes:
         if n.op != "MHA":
@@ -69,7 +148,7 @@ def split_heads(g: Graph) -> Graph:
         e = n.attrs["d_model"]
         partials = []
         for head in range(h):
-            out = g.add_tensor(f"{n.name}_part{head}", (s, e))
+            out = g.add_tensor(f"{n.name}_part{head}", (s, e), dtype="int32")
             partials.append(out)
             new_nodes.append(
                 Node(
@@ -77,16 +156,23 @@ def split_heads(g: Graph) -> Graph:
                     op="MHAHead",
                     inputs=list(n.inputs),
                     outputs=[out],
-                    attrs={"head": head, "seq": s, "head_dim": p, "d_model": e},
+                    attrs={**n.attrs, "head": head, "seq": s, "head_dim": p,
+                           "d_model": e},
                 )
             )
+        accum_inputs = list(partials)
+        if n.attrs.get("has_bias") and len(n.inputs) >= 9:
+            accum_inputs.append(n.inputs[8])  # output-projection bias
+        accum_attrs = {"dims": (s, e), "heads": h}
+        if "out_scales" in n.attrs:
+            accum_attrs["out_scales"] = n.attrs["out_scales"]
         new_nodes.append(
             Node(
                 name=f"{n.name}_accum",
                 op="HeadAccum",
-                inputs=partials,
+                inputs=accum_inputs,
                 outputs=list(n.outputs),
-                attrs={"dims": (s, e), "heads": h},
+                attrs=accum_attrs,
             )
         )
     g.nodes = new_nodes
@@ -99,20 +185,14 @@ ITA_OPS = {"MatMul", "GELU", "MHAHead", "MHA"}
 
 def map_engines(g: Graph, granule: int = ITA_GRANULE) -> Graph:
     """Per-node accelerator-vs-cluster decision (Deeploy's bottom-up rule:
-    accelerated when supported, fallback kernel otherwise)."""
+    accelerated when supported, fallback kernel otherwise).
+
+    The decision is :func:`ita_supports` on :func:`node_opdesc` — shared
+    with ``DispatchTable.resolve`` so the plan's static engine column and
+    the runtime dispatch can never disagree at equal granule.
+    """
     for n in g.nodes:
-        if n.op in ITA_OPS:
-            dims = n.attrs.get("dims")
-            if n.op in ("MHAHead", "MHA"):
-                n.engine = "ita"
-                continue
-            desc = OpDesc(kind="gemm" if n.op == "MatMul" else "gelu",
-                          shapes=(tuple(dims),) if dims else ())
-            # alignment is resolved by padding inside the tiler; dims <= 512
-            # are handled by tiling — ITA accepts every int8 matmul here
-            n.engine = "ita"
-        else:
-            n.engine = "cluster"
+        n.engine = "ita" if ita_supports(node_opdesc(n, granule), granule) else "cluster"
     return g
 
 
@@ -126,12 +206,19 @@ def fuse_gelu_epilogue(g: Graph) -> Graph:
         if n.op == "MatMul" and i + 1 < len(g.nodes):
             nxt = g.nodes[i + 1]
             if nxt.op == "GELU" and nxt.inputs[0] in n.outputs and n.engine == "ita":
+                attrs = {**n.attrs, "activation": "gelu"}
+                if "scales" in n.attrs and "scales" in nxt.attrs:
+                    # pre-activation grid = the GEMM's requant target;
+                    # the i-GeLU output requantizes to the GELU's grid
+                    s_in, s_w, s_mid = n.attrs["scales"]
+                    attrs["scales"] = (s_in, s_w, nxt.attrs["scales"][1])
+                    attrs["s_preact"] = s_mid
                 fused = Node(
                     name=n.name + "_gelu",
                     op="MatMul",
                     inputs=list(n.inputs),
                     outputs=list(nxt.outputs),
-                    attrs={**n.attrs, "activation": "gelu"},
+                    attrs=attrs,
                 )
                 fused.engine = "ita"
                 new_nodes.append(fused)
@@ -142,10 +229,10 @@ def fuse_gelu_epilogue(g: Graph) -> Graph:
     return g
 
 
-def deploy_pipeline(g: Graph, head_by_head: bool = True) -> Graph:
+def deploy_pipeline(g: Graph, head_by_head: bool = True, granule: int = ITA_GRANULE) -> Graph:
     g = fuse_mha(g)
     if head_by_head:
         g = split_heads(g)
-    g = map_engines(g)
+    g = map_engines(g, granule)
     g = fuse_gelu_epilogue(g)
     return g

@@ -1,0 +1,173 @@
+"""DeploymentPlan — the serializable compile artifact of the deploy flow.
+
+The paper's automated flow ends in a *fully static* deployment artifact:
+every operator carries its engine assignment, its tiling solution and a
+fixed memory offset, and the execution order is decided offline.  This
+module is that artifact for our pipeline: the output of
+:func:`repro.deploy.lowering.lower`, consumed by
+:mod:`repro.deploy.executor`, and round-trippable through JSON so plans
+can be cached next to checkpoints and diffed across compiler versions.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+
+def _tupleize(obj):
+    """Recursively turn lists into tuples (JSON round-trip normalizer)."""
+    if isinstance(obj, list):
+        return tuple(_tupleize(v) for v in obj)
+    if isinstance(obj, dict):
+        return {k: _tupleize(v) for k, v in obj.items()}
+    return obj
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Static description of one plan tensor (activation or weight)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "int8"
+    weight: bool = False
+    offset: int | None = None  # static activation offset (None for weights)
+    size: int = 0  # allocated bytes (0 for weights: resident in L2)
+
+    @staticmethod
+    def from_dict(d: dict) -> "TensorSpec":
+        return TensorSpec(
+            name=d["name"],
+            shape=tuple(d["shape"]),
+            dtype=d.get("dtype", "int8"),
+            weight=bool(d.get("weight", False)),
+            offset=d.get("offset"),
+            size=int(d.get("size", 0)),
+        )
+
+
+@dataclass(frozen=True)
+class PlanNode:
+    """One scheduled operator: engine-assigned, quant-parameterized."""
+
+    name: str
+    op: str  # graph-level op (MatMul / MHA / LayerNorm / ...)
+    kind: str  # dispatch-table kind (gemm / mha / layernorm / ...)
+    engine: str  # "ita" | "cluster" — the static mapping decision
+    inputs: tuple[str, ...]
+    outputs: tuple[str, ...]
+    attrs: dict = field(default_factory=dict)
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlanNode":
+        return PlanNode(
+            name=d["name"],
+            op=d["op"],
+            kind=d["kind"],
+            engine=d["engine"],
+            inputs=tuple(d["inputs"]),
+            outputs=tuple(d["outputs"]),
+            attrs=_tupleize(d.get("attrs", {})),
+        )
+
+
+@dataclass
+class DeploymentPlan:
+    """Topologically scheduled, engine-mapped, statically allocated plan.
+
+    ``nodes`` are stored in schedule order (``schedule`` lists the same
+    names, kept explicit so consumers can verify the invariant after
+    deserialization).  ``tilings`` holds the per-node geometric solution
+    of the ASIC tiler; ``memory_peak``/per-tensor offsets are the static
+    L2 activation layout.  ``quant`` carries the PTQ scale set the
+    executor folds into requantization multipliers.
+    """
+
+    arch: str
+    seq_len: int
+    granule: int
+    head_by_head: bool
+    quant: dict  # {"s_act": float, "s_res": float, "s_w": float}
+    nodes: list[PlanNode]
+    tensors: dict[str, TensorSpec]
+    inputs: tuple[str, ...]
+    outputs: tuple[str, ...]
+    schedule: tuple[str, ...]
+    tilings: dict[str, dict] = field(default_factory=dict)
+    memory_peak: int = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def weight_names(self) -> list[str]:
+        return [t.name for t in self.tensors.values() if t.weight]
+
+    def engine_of(self, node_name: str) -> str:
+        return next(n.engine for n in self.nodes if n.name == node_name)
+
+    def counts(self) -> dict[str, int]:
+        ita = sum(n.engine == "ita" for n in self.nodes)
+        return {"nodes": len(self.nodes), "ita": ita, "cluster": len(self.nodes) - ita}
+
+    def validate(self) -> "DeploymentPlan":
+        assert tuple(n.name for n in self.nodes) == self.schedule, "schedule desync"
+        produced = set(self.inputs) | {t.name for t in self.tensors.values() if t.weight}
+        for n in self.nodes:
+            for t in n.inputs:
+                assert t in produced, f"{n.name} consumes unscheduled tensor {t}"
+            produced.update(n.outputs)
+        for t in self.outputs:
+            assert t in produced, f"plan output {t} never produced"
+        return self
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "seq_len": self.seq_len,
+            "granule": self.granule,
+            "head_by_head": self.head_by_head,
+            "quant": dict(self.quant),
+            "nodes": [asdict(n) for n in self.nodes],
+            "tensors": {k: asdict(v) for k, v in self.tensors.items()},
+            "inputs": list(self.inputs),
+            "outputs": list(self.outputs),
+            "schedule": list(self.schedule),
+            "tilings": self.tilings,
+            "memory_peak": self.memory_peak,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "DeploymentPlan":
+        return DeploymentPlan(
+            arch=d["arch"],
+            seq_len=int(d["seq_len"]),
+            granule=int(d["granule"]),
+            head_by_head=bool(d["head_by_head"]),
+            quant=dict(d["quant"]),
+            nodes=[PlanNode.from_dict(n) for n in d["nodes"]],
+            tensors={k: TensorSpec.from_dict(v) for k, v in d["tensors"].items()},
+            inputs=tuple(d["inputs"]),
+            outputs=tuple(d["outputs"]),
+            schedule=tuple(d["schedule"]),
+            tilings=_tupleize(d.get("tilings", {})),
+            memory_peak=int(d.get("memory_peak", 0)),
+        ).validate()
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @staticmethod
+    def from_json(s: str) -> "DeploymentPlan":
+        return DeploymentPlan.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+
+    @staticmethod
+    def load(path: str) -> "DeploymentPlan":
+        with open(path) as f:
+            return DeploymentPlan.from_json(f.read())

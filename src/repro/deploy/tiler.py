@@ -11,6 +11,7 @@ VMEM budget; the same solver serves both — only the constants change.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 
@@ -79,6 +80,7 @@ class GemmTiling:
         return 2 * self.m * self.n * self.k
 
 
+@functools.lru_cache(maxsize=4096)
 def solve_gemm_tiling(
     m: int,
     n: int,
@@ -91,6 +93,12 @@ def solve_gemm_tiling(
     """Granule-aligned double-buffered tiling minimizing L2<->L1 traffic
     (Deeploy's objective: DMA time must hide under compute), then tile
     count (per-tile dispatch overhead).
+
+    Memoized: encoder graphs repeat the same ``(m, n, k)`` per layer, so
+    each distinct GEMM geometry is brute-forced once per process.  The
+    candidate cube is pruned on the A/B-bytes lower bound — a ``(tm, tk,
+    tn)`` whose double-buffered A+B tiles alone exceed the L1 budget can
+    never be feasible, so the inner loop is skipped entirely.
     """
     def candidates(dim):
         top = min(max_tile, math.ceil(dim / granule) * granule)
@@ -99,7 +107,13 @@ def solve_gemm_tiling(
     best = None
     for tk in candidates(k):
         for tn in candidates(n):
+            # A/B-only lower bound with the smallest tm (== granule):
+            # 2 * (tm*tk [A] + tk*tn [B]) already over budget -> no tm fits.
+            if 2 * (granule * tk + tk * tn) > budget:
+                continue
             for tm in candidates(m):
+                if 2 * (tm * tk + tk * tn) > budget:
+                    break  # tm only grows; A bytes are monotone in tm
                 t = GemmTiling(m, n, k, tm, tn, tk)
                 if t.l1_bytes <= budget:
                     score = (t.dma_bytes, t.n_tiles)
@@ -129,6 +143,7 @@ class MhaTiling:
         return 2 * (3 * t * p + 2 * t * t + t * p)
 
 
+@functools.lru_cache(maxsize=1024)
 def solve_mha_tiling(
     seq: int, head_dim: int, *, granule: int = ITA_GRANULE, budget: int = ITA_L1_BYTES
 ) -> MhaTiling:

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core import itamax as im
 from repro.quant.qparams import requantize
 
@@ -174,7 +176,7 @@ def ita_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.int32),
             pltpu.VMEM((block_q, d), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 from repro.core import itamax as im
 
 
@@ -42,6 +44,6 @@ def itamax_pallas(
         ],
         out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(logits, lut)

@@ -16,6 +16,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
 Outputs one JSON per cell under experiments/dryrun/.
+
+Plan-backed model path (the paper's deployment flow, executable):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mobilebert --reduced --via-plan
+lowers the config through the deploy pass pipeline into a DeploymentPlan,
+executes the full encoder forward through the plan executor (dispatch via
+the runtime DispatchTable), and checks the output bit-exactly against the
+model-level ``forward_w8a8`` path on the identical quantized params.
 """
 
 import argparse
@@ -152,6 +159,84 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str) -> di
     return rec
 
 
+def run_via_plan(
+    arch: str,
+    *,
+    reduced_cfg: bool,
+    backend: str,
+    batch_size: int,
+    seq_len: int | None,
+    head_by_head: bool,
+    out_dir: str,
+) -> int:
+    """Compile -> plan -> execute one encoder arch; verify vs forward_w8a8."""
+    import numpy as np
+
+    from repro.configs import reduced
+    from repro.core.heterogeneous import Backend
+    from repro.deploy.executor import make_jit_executor, plan_and_bind
+    from repro.models import encoder as EN
+
+    cfg = get_config(arch)
+    if reduced_cfg:
+        cfg = reduced(cfg)
+    if cfg.family != "encoder":
+        raise SystemExit(f"--via-plan lowers encoder configs; {arch} is {cfg.family}")
+
+    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    t0 = time.time()
+    plan, weights, qp = plan_and_bind(cfg, seq_len, head_by_head=head_by_head, backend=be)
+    t_lower = time.time() - t0
+    counts = plan.counts()
+    print(
+        f"[plan   ] {arch}: {counts['nodes']} nodes "
+        f"({counts['ita']} ita / {counts['cluster']} cluster), "
+        f"{len(plan.tilings)} tilings, static peak {plan.memory_peak / 1024:.0f} KiB, "
+        f"lowered in {t_lower:.2f}s"
+    )
+
+    key = jax.random.PRNGKey(0)
+    name = plan.inputs[0]
+    if name == "tokens":
+        batch = {name: jax.random.randint(key, (batch_size, plan.seq_len), 0, cfg.vocab, jnp.int32)}
+    else:
+        batch = {name: jax.random.randint(
+            key, (batch_size, plan.seq_len, cfg.d_model), -64, 64, jnp.int8)}
+
+    fn = make_jit_executor(plan, backend=be)
+    t0 = time.time()
+    out = jax.block_until_ready(fn(weights, batch))
+    t_first = time.time() - t0
+    t0 = time.time()
+    out = jax.block_until_ready(fn(weights, batch))
+    t_steady = time.time() - t0
+
+    ref = jax.block_until_ready(EN.forward_w8a8(cfg, qp, batch))
+    exact = bool(np.array_equal(np.asarray(out), np.asarray(ref)))
+    max_diff = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+    status = "ok" if exact else "MISMATCH"
+    print(
+        f"[{status:7s}] plan-executor [{be.value}] vs forward_w8a8: "
+        f"bit-exact={exact} (max |diff| {max_diff:.3g}); "
+        f"compile+run {t_first:.2f}s, steady {t_steady * 1e3:.1f}ms "
+        f"for batch {batch_size} x seq {plan.seq_len}"
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    rec = {
+        "arch": arch, "reduced": reduced_cfg, "backend": be.value,
+        "status": "ok" if exact else "mismatch", "bit_exact": exact,
+        "plan": counts, "memory_peak": plan.memory_peak,
+        "lower_s": round(t_lower, 3), "steady_s": round(t_steady, 4),
+        "head_by_head": head_by_head,
+    }
+    path = os.path.join(out_dir, f"{arch}__via_plan__{be.value}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    plan.save(os.path.join(out_dir, f"{arch}__plan.json"))
+    return 0 if exact else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -159,7 +244,31 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
     ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--via-plan", action="store_true",
+                    help="lower --arch to a DeploymentPlan and execute it "
+                         "(encoder family), verifying bit-exactness vs w8a8")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU smoke) variant of --arch")
+    ap.add_argument("--backend", choices=["w8a8", "ita"], default="w8a8",
+                    help="plan-executor backend: XLA integer path or Pallas kernels")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--head-by-head", action="store_true",
+                    help="lower with the paper's per-head MHA schedule")
     args = ap.parse_args(argv)
+
+    if args.via_plan:
+        if not args.arch:
+            raise SystemExit("--via-plan requires --arch")
+        return run_via_plan(
+            args.arch,
+            reduced_cfg=args.reduced,
+            backend=args.backend,
+            batch_size=args.batch,
+            seq_len=args.seq,
+            head_by_head=args.head_by_head,
+            out_dir=args.out_dir,
+        )
 
     archs = [args.arch] if args.arch else [a for a in list_archs()[:10]]
     shapes = [args.shape] if args.shape else [c.name for c in ALL_SHAPES]

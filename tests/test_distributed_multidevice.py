@@ -6,6 +6,7 @@ re-meshing 8 -> 4 devices with parameter re-sharding, and FSDP param
 placement on a 2x2 mesh.
 """
 
+import os
 import subprocess
 import sys
 
@@ -75,12 +76,18 @@ print("FSDP_OK")
 
 
 def _run(script: str, token: str):
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    # keep the platform pin: without it a TPU-plugin host spins on GCP
+    # metadata queries inside the hermetic subprocess
+    for var in ("JAX_PLATFORMS", "TPU_SKIP_MDS_QUERY", "HOME"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     r = subprocess.run(
         [sys.executable, "-c", script],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         timeout=600,
     )
     assert token in r.stdout, (r.stdout, r.stderr[-2000:])

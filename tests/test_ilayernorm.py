@@ -3,21 +3,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import ilayernorm as iln
 from repro.quant.qparams import quantize_array
 
 
 class TestISqrt:
-    @given(v=st.integers(0, 2**31 - 1))
-    @settings(max_examples=300, deadline=None)
-    def test_floor_sqrt(self, v):
-        got = int(iln.isqrt(jnp.int32(v)))
-        want = max(1, int(np.floor(np.sqrt(v))))
-        assert got == want
-
     def test_vector(self):
         v = jnp.asarray([0, 1, 2, 3, 4, 15, 16, 2**30, 2**31 - 1], jnp.int32)
         got = np.asarray(iln.isqrt(v))

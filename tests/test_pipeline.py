@@ -2,6 +2,7 @@
 host mesh (subprocess with XLA_FLAGS so the main test process keeps 1
 device)."""
 
+import os
 import subprocess
 import sys
 
@@ -36,12 +37,18 @@ print("PIPELINE_OK", err)
 
 
 def test_pipeline_matches_sequential():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    # keep the platform pin: without it a TPU-plugin host spins on GCP
+    # metadata queries inside the hermetic subprocess
+    for var in ("JAX_PLATFORMS", "TPU_SKIP_MDS_QUERY", "HOME"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True,
         text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         timeout=600,
     )
     assert "PIPELINE_OK" in r.stdout, (r.stdout, r.stderr[-2000:])

@@ -1,0 +1,123 @@
+"""Hypothesis property tests (all modules), gathered behind one guard.
+
+The ``[test]`` extra installs hypothesis; where it is missing this module
+skips at collection (``pytest.importorskip``) and the deterministic suites
+keep running — the suite degrades gracefully instead of breaking
+collection.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ilayernorm as iln
+from repro.core import itamax as im
+from repro.deploy import memory, tiler
+from repro.deploy.graph import Graph
+from repro.quant.qparams import (
+    MULT_MAX,
+    SHIFT_MAX,
+    SHIFT_MIN,
+    requantize,
+    requantize_wide,
+    rounding_rshift,
+)
+
+
+def _requant_gold(acc, mult, shift, zp=0):
+    """Arbitrary-precision (python int) reference of requantize."""
+    out = (int(acc) * int(mult) + (1 << (shift - 1))) >> shift
+    return int(np.clip(out + zp, -128, 127))
+
+
+class TestTilerProperties:
+    @given(
+        m=st.integers(1, 2048), n=st.integers(1, 2048), k=st.integers(1, 2048)
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_always_feasible(self, m, n, k):
+        t = tiler.solve_gemm_tiling(m, n, k)
+        assert t.l1_bytes <= tiler.ITA_L1_BYTES
+        assert t.useful_ops == 2 * m * n * k
+
+
+class TestMemoryPlannerProperties:
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_graphs_no_overlap(self, seed):
+        """Random branching DAGs: planner must never alias live tensors."""
+        rng = np.random.default_rng(seed)
+        g = Graph()
+        live = [g.add_tensor("in", (int(rng.integers(1, 64)), 32))]
+        g.inputs.append("in")
+        for i in range(int(rng.integers(2, 25))):
+            src = [live[int(rng.integers(0, len(live)))]]
+            if rng.random() < 0.4 and len(live) > 1:
+                src.append(live[int(rng.integers(0, len(live)))])
+            out = g.add_tensor(f"t{i}", (int(rng.integers(1, 64)), 32))
+            g.add_node("Add" if len(src) > 1 else "LayerNorm", src, [out],
+                       dims=g.tensors[out].shape)
+            live.append(out)
+        g.outputs.append(live[-1])
+        plan = memory.plan_memory(g)
+        assert plan.check_no_overlap()
+        assert plan.peak >= memory.peak_lower_bound(g)
+
+
+class TestISqrtProperties:
+    @given(v=st.integers(0, 2**31 - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_floor_sqrt(self, v):
+        got = int(iln.isqrt(jnp.int32(v)))
+        want = max(1, int(np.floor(np.sqrt(v))))
+        assert got == want
+
+
+class TestRequantizeProperties:
+    @given(
+        acc=st.integers(-(1 << 25), (1 << 25) - 1),
+        mult=st.integers(1, MULT_MAX),
+        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_bit_exact_vs_python_int(self, acc, mult, shift):
+        got = int(requantize(jnp.int32(acc), mult, shift))
+        assert got == _requant_gold(acc, mult, shift)
+
+    @given(
+        acc=st.integers(-(1 << 25), (1 << 25) - 1),
+        mult=st.integers(1, MULT_MAX),
+        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_wide_matches_float(self, acc, mult, shift):
+        got = int(requantize_wide(jnp.int32(acc), mult, shift, out_bits=31))
+        gold = (acc * mult + (1 << (shift - 1))) >> shift
+        gold = int(np.clip(gold, -(1 << 30), (1 << 30) - 1))
+        assert got == gold
+
+    @given(x=st.integers(-(1 << 29), (1 << 29)), s=st.integers(1, 20))
+    @settings(max_examples=200, deadline=None)
+    def test_rounding_shift_matches_python(self, x, s):
+        got = int(rounding_rshift(jnp.int32(x), s))
+        assert got == (x + (1 << (s - 1))) >> s
+
+
+class TestItamaxProperties:
+    @given(data=st.data())
+    @settings(max_examples=30, deadline=None)
+    def test_property_monotone(self, data):
+        """Larger logit -> no smaller attention weight (within a row)."""
+        n = data.draw(st.integers(8, 96))
+        row = data.draw(
+            st.lists(st.integers(-128, 127), min_size=n, max_size=n)
+        )
+        x = jnp.asarray([row], jnp.int8)
+        a = np.asarray(im.itamax_rowwise(x))[0]
+        order = np.argsort(row, kind="stable")
+        assert (np.diff(a[order]) >= 0).all()

@@ -3,8 +3,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.quant.qparams import (
     MULT_MAX,
@@ -15,7 +13,6 @@ from repro.quant.qparams import (
     quantize_multiplier,
     quantize_weight_per_channel,
     requantize,
-    requantize_wide,
     rounding_rshift,
 )
 
@@ -40,27 +37,15 @@ class TestQuantizeMultiplier:
 
 
 class TestRequantize:
-    @given(
-        acc=st.integers(-(1 << 25), (1 << 25) - 1),
-        mult=st.integers(1, MULT_MAX),
-        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
-    )
-    @settings(max_examples=300, deadline=None)
-    def test_bit_exact_vs_python_int(self, acc, mult, shift):
-        got = int(requantize(jnp.int32(acc), mult, shift))
-        assert got == _requant_gold(acc, mult, shift)
-
-    @given(
-        acc=st.integers(-(1 << 25), (1 << 25) - 1),
-        mult=st.integers(1, MULT_MAX),
-        shift=st.integers(SHIFT_MIN, SHIFT_MAX),
-    )
-    @settings(max_examples=200, deadline=None)
-    def test_wide_matches_float(self, acc, mult, shift):
-        got = int(requantize_wide(jnp.int32(acc), mult, shift, out_bits=31))
-        gold = (acc * mult + (1 << (shift - 1))) >> shift
-        gold = int(np.clip(gold, -(1 << 30), (1 << 30) - 1))
-        assert got == gold
+    def test_sampled_vs_python_int(self):
+        rng = np.random.default_rng(0)
+        for _ in range(64):
+            acc = int(rng.integers(-(1 << 25), 1 << 25))
+            mult = int(rng.integers(1, MULT_MAX))
+            shift = int(rng.integers(SHIFT_MIN, SHIFT_MAX + 1))
+            assert int(requantize(jnp.int32(acc), mult, shift)) == _requant_gold(
+                acc, mult, shift
+            )
 
     def test_vectorized(self):
         accs = jnp.arange(-1000, 1000, 7, dtype=jnp.int32) * 1001
@@ -81,11 +66,12 @@ class TestRequantize:
 
 
 class TestRoundingShift:
-    @given(x=st.integers(-(1 << 29), (1 << 29)), s=st.integers(1, 20))
-    @settings(max_examples=200, deadline=None)
-    def test_matches_python(self, x, s):
-        got = int(rounding_rshift(jnp.int32(x), s))
-        assert got == (x + (1 << (s - 1))) >> s
+    def test_sampled_matches_python(self):
+        rng = np.random.default_rng(1)
+        for _ in range(64):
+            x = int(rng.integers(-(1 << 29), (1 << 29) + 1))
+            s = int(rng.integers(1, 21))
+            assert int(rounding_rshift(jnp.int32(x), s)) == (x + (1 << (s - 1))) >> s
 
 
 class TestWeightQuant:
