@@ -45,6 +45,14 @@ ITA_GRANULE = 64
 ITA_MAX_DIM = 512
 TPU_GRANULE = 128
 
+# Role-named aliases: ``Backend.ITA`` runs the *Pallas* kernels and hence
+# aligns to the TPU MXU granule, while ``Backend.W8A8`` runs the
+# paper-faithful arithmetic at the ASIC's granule.  Spelled out because the
+# raw pairing ("ITA backend -> TPU granule") reads inverted at call sites;
+# use :func:`backend_granule` instead of re-deriving the mapping by hand.
+PALLAS_GRANULE = TPU_GRANULE
+ASIC_GRANULE = ITA_GRANULE
+
 
 @dataclasses.dataclass(frozen=True)
 class OpDesc:
@@ -58,6 +66,11 @@ class OpDesc:
 
 #: ops the accelerator datapath supports at all
 ACCEL_KINDS = {"gemm", "mha", "relu", "gelu", "identity"}
+
+
+def backend_granule(backend: "Backend") -> int:
+    """Alignment granule at which ``resolve`` judges ``ita_supports``."""
+    return PALLAS_GRANULE if backend is Backend.ITA else ASIC_GRANULE
 
 
 def ita_supports(op: OpDesc, granule: int = ITA_GRANULE) -> bool:
@@ -128,7 +141,7 @@ class DispatchTable:
     def resolve(self, op: OpDesc, backend: Backend) -> tuple[Engine, Callable]:
         if backend is Backend.FLOAT:
             return Engine.CLUSTER, self._lookup(op.kind, Engine.CLUSTER, backend)
-        granule = TPU_GRANULE if backend is Backend.ITA else ITA_GRANULE
+        granule = backend_granule(backend)
         if ita_supports(op, granule) and self._has_accelerator(op.kind, backend):
             return Engine.ACCELERATOR, self._lookup(op.kind, Engine.ACCELERATOR, backend)
         return Engine.CLUSTER, self._lookup(op.kind, Engine.CLUSTER, backend)
@@ -165,13 +178,34 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
       embed:      fn(table_q, tokens) -> int8
       classifier: fn(h_q, table_q, *, scale) -> float32
       dequant:    fn(h_q, *, scale) -> float32
+
+    Decoder / KV-cache kinds (all cluster: integer RoPE, SiLU and cache
+    maintenance are Snitch software kernels in the paper's template, and
+    the ITA attention datapath has no causal/cache-mask mode):
+
+      rope:        fn(x_q, positions, *, heads, head_dim, theta) -> int8
+      attn_causal: fn(q, k, v, *, heads, kv_heads, head_dim, s_act, s_out,
+                      block_k) -> int8  [B, S, H*D] merged layout
+      attn_cached: fn(q, k_cache, v_cache, pos, *, heads, head_dim, s_act,
+                      s_out, block_k) -> int8  [B, 1, H*D]
+      cache_write: fn(kv, cache | None, pos | None, *, kv_heads, head_dim,
+                      max_len) -> int8  [B, Hkv, max_len, D]
+      silumul:     fn(gate_q, up_q, *, scales) -> int8
+      lasttok:     fn(x_q) -> int8 (last sequence position)
+      lmhead:      fn(h_q, w_q, *, scale, tied) -> float32
     """
     table = DEFAULT_TABLE if table is None else table
 
+    import jax
     import jax.numpy as jnp
 
     from repro.core import itamax as im
-    from repro.core.attention import MhaQParams, attention_rowwise_i8
+    from repro.core.attention import (
+        MhaQParams,
+        attention_decode_i8,
+        attention_flash_i8,
+        attention_rowwise_i8,
+    )
     from repro.core.igelu import igelu_int, make_igelu_params
     from repro.core.quant_linear import ACT_IDENTITY, make_qlinear_params, qlinear_i8
     from repro.kernels import igelu as igelu_pallas
@@ -295,6 +329,72 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
 
     table.register("classifier", Engine.CLUSTER, _classifier)
     table.register("dequant", Engine.CLUSTER, lambda h_q, *, scale: h_q.astype(jnp.float32) * scale)
+
+    # -- decoder / KV-cache cluster kinds (serving path; see docstring).
+    # Plan tensors keep the merged [S, H*D] layout between nodes; the
+    # runners split/merge heads internally — reshapes are free and exact.
+    def _split(x_q, heads, head_dim):
+        b, s, _ = x_q.shape
+        return x_q.reshape(b, s, heads, head_dim).transpose(0, 2, 1, 3)
+
+    def _merge(x_q):
+        b, h, s, d = x_q.shape
+        return x_q.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+    def _rope(x_q, positions, *, heads, head_dim, theta):
+        positions = jnp.asarray(positions).reshape(-1)
+        c_q, s_q = L.rope_tables_i8(positions, head_dim, theta)
+        return _merge(L.apply_rope_i8(_split(x_q, heads, head_dim), c_q, s_q))
+
+    table.register("rope", Engine.CLUSTER, _rope)
+
+    def _attn_causal(q_m, k_m, v_m, *, heads, kv_heads, head_dim, s_act, s_out, block_k):
+        p = MhaQParams.make_flash(s_act, s_act, s_act, s_out, max(head_dim, 1))
+        kh = _split(k_m, kv_heads, head_dim)
+        out = attention_flash_i8(
+            _split(q_m, heads, head_dim), kh, _split(v_m, kv_heads, head_dim),
+            p, causal=True, block_k=min(block_k, kh.shape[2]),
+        )
+        return _merge(out)
+
+    table.register("attn_causal", Engine.CLUSTER, _attn_causal)
+
+    def _attn_cached(q_m, k_cache, v_cache, pos, *, heads, head_dim, s_act, s_out, block_k):
+        p = MhaQParams.make_flash(s_act, s_act, s_act, s_out, max(head_dim, 1))
+        qh = _split(q_m, heads, head_dim)
+        kv_len = jnp.full((qh.shape[0],), pos + 1, jnp.int32)
+        out = attention_decode_i8(
+            qh, k_cache, v_cache, kv_len, p, block_k=min(block_k, k_cache.shape[2])
+        )
+        return _merge(out)
+
+    table.register("attn_cached", Engine.CLUSTER, _attn_cached)
+
+    def _cache_write(kv_m, cache, pos, *, kv_heads, head_dim, max_len):
+        kh = _split(kv_m, kv_heads, head_dim)
+        if cache is None:  # prefill: fresh cache, rows [0, S) written
+            cache = jnp.zeros((kh.shape[0], kv_heads, max_len, head_dim), jnp.int8)
+            pos = 0
+        return jax.lax.dynamic_update_slice(cache, kh, (0, 0, pos, 0))
+
+    table.register("cache_write", Engine.CLUSTER, _cache_write)
+
+    def _silu_mul(g_q, u_q, *, scales):
+        s_g, s_u, s_out = scales
+        sg = L.isilu_i8(g_q, s_g, s_g)
+        prod = jnp.asarray(sg, jnp.int32) * jnp.asarray(u_q, jnp.int32)
+        qp = make_qparams(s_g, s_u, s_out)
+        return requantize(prod, qp.mult, qp.shift)
+
+    table.register("silumul", Engine.CLUSTER, _silu_mul)
+    table.register("lasttok", Engine.CLUSTER, lambda x_q: x_q[:, -1:])
+
+    def _lm_head(h_q, w_q, *, scale, tied):
+        w = w_q.astype(jnp.int8).T if tied else w_q.astype(jnp.int8)
+        acc = jnp.matmul(h_q.astype(jnp.int8), w, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * scale
+
+    table.register("lmhead", Engine.CLUSTER, _lm_head)
     return table
 
 

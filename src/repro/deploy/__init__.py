@@ -6,10 +6,12 @@ graph -> patterns (MHA fusion, head split, engine mapping) -> tiler
 "profiler" reading compiled dry-run artifacts.
 
 The executable half: ``lowering`` compiles an ArchConfig through the pass
-pipeline into a serializable ``plan.DeploymentPlan``; ``executor`` runs
-the plan as a jitted JAX function, resolving every node through the
-runtime DispatchTable (Pallas kernels on the accelerator engine, XLA
-fallbacks on the cluster).
+pipeline into a serializable ``plan.DeploymentPlan`` (encoder family) or
+a linked ``plan.DecoderPlanPair`` — prefill + decode-step schedules
+sharing one persistent, statically planned KV-cache region (decoder
+family); ``executor`` runs the plans as jitted JAX functions, resolving
+every node through the runtime DispatchTable (Pallas kernels on the
+accelerator engine, XLA fallbacks on the cluster).
 """
 
 from repro.deploy import (  # noqa: F401

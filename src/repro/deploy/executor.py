@@ -25,26 +25,29 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.heterogeneous import (
     DEFAULT_TABLE,
-    ITA_GRANULE,
-    TPU_GRANULE,
     Backend,
     DispatchTable,
     OpDesc,
+    backend_granule,
 )
-from repro.core.quant_linear import ACT_GELU, ACT_IDENTITY
-from repro.deploy.plan import DeploymentPlan, PlanNode
+from repro.core.quant_linear import ACT_GELU, ACT_IDENTITY, ACT_RELU
+from repro.deploy.plan import DecoderPlanPair, DeploymentPlan, PlanNode
 
-
-def _backend_granule(backend: Backend) -> int:
-    return TPU_GRANULE if backend is Backend.ITA else ITA_GRANULE
+#: fused-activation vocabulary the GEMM runner can lower; anything else in
+#: a plan is a compile/runtime mismatch and must fail loudly (a silent
+#: identity fallback executes the wrong function).
+_GEMM_ACTS = {"identity": ACT_IDENTITY, "relu": ACT_RELU, "gelu": ACT_GELU}
 
 
 def _ceil_to(d: int, g: int) -> int:
     return math.ceil(d / g) * g
 
 
-def _gemm_desc(m: int, k: int, n: int, granule: int, act: str = "identity") -> OpDesc:
-    return OpDesc("gemm", shapes=((_ceil_to(m, granule), k), (k, n)), act=act)
+def _gemm_desc(
+    m: int, k: int, n: int, granule: int, act: str = "identity", pad_m: bool = True
+) -> OpDesc:
+    mm = _ceil_to(m, granule) if pad_m else m
+    return OpDesc("gemm", shapes=((mm, k), (k, n)), act=act)
 
 
 def _mha_desc(seq: int, head_dim: int, granule: int) -> OpDesc:
@@ -68,13 +71,20 @@ def _run_gemm(node: PlanNode, env, table, backend):
     x, w = env[node.inputs[0]], env[node.inputs[1]]
     b = env[node.inputs[2]] if len(node.inputs) > 2 else None
     m, k, n = node.attrs["dims"]
-    act = ACT_GELU if node.attrs.get("activation") == "gelu" else ACT_IDENTITY
+    act_name = node.attrs.get("activation", "identity")
+    if act_name not in _GEMM_ACTS:
+        raise NotImplementedError(
+            f"{node.name}: no GEMM lowering for fused activation {act_name!r} "
+            f"(supported: {sorted(_GEMM_ACTS)})"
+        )
+    act = _GEMM_ACTS[act_name]
     scales = node.attrs["scales"]
     s_preact = node.attrs.get("s_preact")
     if act == ACT_GELU and s_preact is None:
         s_preact = scales[2]
-    g = _backend_granule(backend)
-    fn = _resolve(table, _gemm_desc(m, k, n, g, node.attrs.get("activation", "identity")), backend)
+    g = backend_granule(backend)
+    desc = _gemm_desc(m, k, n, g, act_name, pad_m=node.attrs.get("pad_m", True))
+    fn = _resolve(table, desc, backend)
     return fn(x, w, b, scales=tuple(scales), act=act, s_preact=s_preact)
 
 
@@ -87,7 +97,7 @@ def _attention_core(node, qh, kh, vh, table, backend):
     proj = node.attrs["proj_scales"]
     outp = node.attrs["out_scales"]
     fn = _resolve(
-        table, _mha_desc(node.attrs["seq"], node.attrs["head_dim"], _backend_granule(backend)),
+        table, _mha_desc(node.attrs["seq"], node.attrs["head_dim"], backend_granule(backend)),
         backend,
     )
     return fn(qh, kh, vh, s_act=proj[2], s_out=outp[0])
@@ -110,7 +120,7 @@ def _run_mha(node: PlanNode, env, table, backend):
     h, hkv, hd = node.attrs["heads"], node.attrs["kv_heads"], node.attrs["head_dim"]
     proj = tuple(node.attrs["proj_scales"])
     outp = tuple(node.attrs["out_scales"])
-    g = _backend_granule(backend)
+    g = backend_granule(backend)
 
     gemm_q = _resolve(table, _gemm_desc(s, e, h * hd, g), backend)
     gemm_kv = _resolve(table, _gemm_desc(s, e, hkv * hd, g), backend)
@@ -136,7 +146,7 @@ def _run_mha_head(node: PlanNode, env, table, backend):
     head = node.attrs["head"]
     kvh = head // (h // hkv)
     proj = tuple(node.attrs["proj_scales"])
-    g = _backend_granule(backend)
+    g = backend_granule(backend)
 
     def slc(w, b, idx):
         lo = idx * hd
@@ -188,6 +198,34 @@ def _run_node(node: PlanNode, env, table, backend):
         return fn(env[node.inputs[0]], env[node.inputs[1]], scale=a["scale"])
     if kind == "dequant":
         return fn(env[node.inputs[0]], scale=a["scale"])
+    # decoder / KV-cache kinds
+    if kind == "rope":
+        positions = (
+            env[node.inputs[1]] if len(node.inputs) > 1  # decode: runtime pos
+            else jnp.arange(a["dims"][0])  # prefill: static 0..S
+        )
+        return fn(env[node.inputs[0]], positions, heads=a["heads"],
+                  head_dim=a["head_dim"], theta=a["theta"])
+    if kind == "attn_causal":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
+                  heads=a["heads"], kv_heads=a["kv_heads"], head_dim=a["head_dim"],
+                  s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+    if kind == "attn_cached":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
+                  env[node.inputs[3]], heads=a["heads"], head_dim=a["head_dim"],
+                  s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+    if kind == "cache_write":
+        cache = env[node.inputs[1]] if len(node.inputs) > 1 else None
+        pos = env[node.inputs[2]] if len(node.inputs) > 2 else None
+        return fn(env[node.inputs[0]], cache, pos, kv_heads=a["kv_heads"],
+                  head_dim=a["head_dim"], max_len=a["max_len"])
+    if kind == "silumul":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], scales=tuple(a["scales"]))
+    if kind == "lasttok":
+        return fn(env[node.inputs[0]])
+    if kind == "lmhead":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], scale=a["scale"],
+                  tied=a["tied"])
     raise NotImplementedError(f"no runner for op kind {kind!r} ({node.op})")
 
 
@@ -234,16 +272,8 @@ def make_jit_executor(
     return jax.jit(fn)
 
 
-def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dict:
-    """Map plan weight names onto the model's quantized param pytree.
-
-    ``qp`` is ``repro.models.encoder.quantize_params`` output (stacked
-    layers from vmap).  The fused ``wqkv`` weight/bias is column-sliced
-    into the plan's wq/wk/wv tensors — bit-identical to the fused GEMM.
-    """
-    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    qd, kd = h * hd, hkv * hd
-    weights: dict = {}
+def _weight_binder(weights: dict):
+    """(put, put_norm) closures writing non-None params into ``weights``."""
 
     def put(name, arr):
         if arr is not None:
@@ -253,21 +283,52 @@ def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dic
         put(prefix + "_g", pq.get("g_q"))
         put(prefix + "_b", pq.get("beta_q"))
 
+    return put, put_norm
+
+
+def _bind_attn_layer(put, put_norm, pre: str, cfg: ArchConfig, lp: dict) -> None:
+    """Shared per-layer attention/norm binding: the fused ``wqkv`` weight
+    (and bias) is column-sliced into the plan's wq/wk/wv tensors —
+    bit-identical to the fused GEMM (integer accumulation is
+    column-separable)."""
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qd, kd = h * hd, hkv * hd
+    wqkv, bqkv = lp["attn"]["wqkv"]["w_q"], lp["attn"]["wqkv"].get("b_q")
+    put(pre + "wq", wqkv[:, :qd])
+    put(pre + "wk", wqkv[:, qd : qd + kd])
+    put(pre + "wv", wqkv[:, qd + kd : qd + 2 * kd])
+    if bqkv is not None:
+        put(pre + "wq_b", bqkv[:qd])
+        put(pre + "wk_b", bqkv[qd : qd + kd])
+        put(pre + "wv_b", bqkv[qd + kd : qd + 2 * kd])
+    put(pre + "wo", lp["attn"]["wo"]["w_q"])
+    put(pre + "wo_b", lp["attn"]["wo"].get("b_q"))
+    put_norm(pre + "norm1", lp["norm1"])
+    put_norm(pre + "norm2", lp["norm2"])
+
+
+def _check_bound(plan: DeploymentPlan, weights: dict) -> dict:
+    """Keep only the plan's declared weights; fail on unbound ones."""
+    bound = {k: v for k, v in weights.items() if k in plan.tensors and plan.tensors[k].weight}
+    missing = [t for t in plan.weight_names if t not in bound]
+    if missing:
+        raise KeyError(f"plan weights without a bound param: {missing[:8]}")
+    return bound
+
+
+def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dict:
+    """Map plan weight names onto the model's quantized param pytree.
+
+    ``qp`` is ``repro.models.encoder.quantize_params`` output (stacked
+    layers from vmap).
+    """
+    weights: dict = {}
+    put, put_norm = _weight_binder(weights)
+
     for l in range(cfg.n_layers):
         lp = jax.tree.map(lambda a: a[l], qp["layers"])
         pre = f"l{l}_"
-        wqkv, bqkv = lp["attn"]["wqkv"]["w_q"], lp["attn"]["wqkv"].get("b_q")
-        put(pre + "wq", wqkv[:, :qd])
-        put(pre + "wk", wqkv[:, qd : qd + kd])
-        put(pre + "wv", wqkv[:, qd + kd : qd + 2 * kd])
-        if bqkv is not None:
-            put(pre + "wq_b", bqkv[:qd])
-            put(pre + "wk_b", bqkv[qd : qd + kd])
-            put(pre + "wv_b", bqkv[qd + kd : qd + 2 * kd])
-        put(pre + "wo", lp["attn"]["wo"]["w_q"])
-        put(pre + "wo_b", lp["attn"]["wo"].get("b_q"))
-        put_norm(pre + "norm1", lp["norm1"])
-        put_norm(pre + "norm2", lp["norm2"])
+        _bind_attn_layer(put, put_norm, pre, cfg, lp)
         put(pre + "up", lp["mlp"]["up"]["w_q"])
         put(pre + "up_b", lp["mlp"]["up"].get("b_q"))
         put(pre + "down", lp["mlp"]["down"]["w_q"])
@@ -277,12 +338,7 @@ def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dic
     put_norm("final_norm", qp["final_norm"])
     if "embed" in qp:
         put("embed_table", qp["embed"]["table_q"])
-
-    bound = {k: v for k, v in weights.items() if k in plan.tensors and plan.tensors[k].weight}
-    missing = [t for t in plan.weight_names if t not in bound]
-    if missing:
-        raise KeyError(f"plan weights without a bound param: {missing[:8]}")
-    return bound
+    return _check_bound(plan, weights)
 
 
 def plan_and_bind(
@@ -313,5 +369,127 @@ def plan_and_bind(
         params = EN.init_params(cfg, key)
     qp = EN.quantize_params(cfg, params)
     plan = lower(cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
-                 granule=_backend_granule(backend))
+                 granule=backend_granule(backend))
     return plan, bind_encoder_weights(plan, cfg, qp), qp
+
+
+# ---------------------------------------------------------------------------
+# Decoder plans: weight binding + KV-cache-threading executors
+# ---------------------------------------------------------------------------
+
+def bind_decoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dict:
+    """Map decoder plan weight names onto ``transformer.quantize_params``.
+
+    Shares the encoder binder's fused-QKV column slicing; the prefill and
+    decode plans declare one weight set, so binding against either plan
+    yields the same dict.
+    """
+    weights: dict = {}
+    put, put_norm = _weight_binder(weights)
+
+    for l in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[l], qp["layers"])
+        pre = f"l{l}_"
+        _bind_attn_layer(put, put_norm, pre, cfg, lp)
+        for mname in ("gate", "up", "down"):
+            if mname in lp["mlp"]:
+                put(pre + mname, lp["mlp"][mname]["w_q"])
+                put(pre + mname + "_b", lp["mlp"][mname].get("b_q"))
+
+    put_norm("final_norm", qp["final_norm"])
+    put("embed_table", qp["embed"]["table_q"])
+    if "lm_head" in qp:
+        put("lm_head", qp["lm_head"]["w_q"])
+    return _check_bound(plan, weights)
+
+
+def plan_and_bind_decoder(
+    cfg: ArchConfig,
+    seq_len: int | None = None,
+    *,
+    max_len: int | None = None,
+    key=None,
+    params: dict | None = None,
+    backend: Backend = Backend.W8A8,
+):
+    """Decoder convenience: float init -> PTQ -> lower pair -> bind.
+
+    Returns ``(pair, weights, qp)``; ``qp`` lets callers run the
+    reference ``prefill_w8a8`` / ``decode_step_w8a8`` chain on the
+    identical quantized params.
+    """
+    from repro.deploy.lowering import lower_decoder
+    from repro.models import transformer as T
+
+    if params is None:
+        key = jax.random.PRNGKey(0) if key is None else key
+        params = T.init_params(cfg, key)
+    qp = T.quantize_params(cfg, params)
+    pair = lower_decoder(cfg, seq_len, max_len=max_len,
+                         granule=backend_granule(backend))
+    return pair, bind_decoder_weights(pair.prefill, cfg, qp), qp
+
+
+def _stack_cache(plan: DeploymentPlan, outs_by_name: dict, length) -> dict:
+    """Per-layer cache outputs -> the model-shaped cache pytree
+    ``{"k": [L, B, Hkv, M, D], "v": ..., "len": int32}``."""
+    ks = [outs_by_name[out] for _, out in plan.kv_state[0::2]]
+    vs = [outs_by_name[out] for _, out in plan.kv_state[1::2]]
+    return {"k": jnp.stack(ks), "v": jnp.stack(vs),
+            "len": jnp.asarray(length, jnp.int32)}
+
+
+def execute_prefill(
+    pair: DecoderPlanPair,
+    weights: dict,
+    batch: dict,
+    *,
+    backend: Backend = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """Run the prefill schedule. Returns ``(logits, cache)`` with the same
+    cache pytree as ``transformer.prefill_w8a8`` (bit-comparable)."""
+    plan = pair.prefill
+    outs = execute(plan, weights, batch, backend=backend, table=table)
+    outs_by_name = dict(zip(plan.outputs, outs))
+    return outs_by_name[plan.outputs[0]], _stack_cache(plan, outs_by_name, plan.seq_len)
+
+
+def execute_decode(
+    pair: DecoderPlanPair,
+    weights: dict,
+    cache: dict,
+    token,
+    *,
+    backend: Backend = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """Advance one token through the decode schedule against ``cache``."""
+    plan = pair.decode
+    batch = {"token": token, "pos": cache["len"]}
+    for i, (cin, _) in enumerate(plan.kv_state):
+        batch[cin] = cache["k" if i % 2 == 0 else "v"][i // 2]
+    outs = execute(plan, weights, batch, backend=backend, table=table)
+    outs_by_name = dict(zip(plan.outputs, outs))
+    cache_out = _stack_cache(plan, outs_by_name, cache["len"] + 1)
+    return outs_by_name[plan.outputs[0]], cache_out
+
+
+def make_decoder_executors(
+    pair: DecoderPlanPair,
+    *,
+    backend: Backend = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """jit-compiled ``(prefill_fn, decode_fn)`` closures over the pair:
+
+      prefill_fn(weights, batch) -> (logits, cache)
+      decode_fn(weights, cache, token) -> (logits, cache)
+    """
+    prefill_fn = jax.jit(
+        lambda w, b: execute_prefill(pair, w, b, backend=backend, table=table)
+    )
+    decode_fn = jax.jit(
+        lambda w, c, t: execute_decode(pair, w, c, t, backend=backend, table=table)
+    )
+    return prefill_fn, decode_fn

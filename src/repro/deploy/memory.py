@@ -10,6 +10,19 @@ Algorithm: tensors live from producer index to last-consumer index; a
 greedy best-fit over the address space assigns offsets so that tensors
 with overlapping lifetimes never overlap in memory (the hypothesis suite
 asserts this invariant and compares the peak against the lower bound).
+
+Decoder plans add two notions on top (Deeploy's KV-cache handling for
+small language models, arXiv 2408.04413):
+
+* **persistent** tensors — KV-cache buffers whose lifetime spans the
+  whole schedule instead of def→last-use.  They are allocated first, in
+  sorted-name order, stacked contiguously from offset 0, so that two
+  plans sharing the same persistent tensor set (the prefill and the
+  decode-step schedule) place them at *identical* offsets — the linked
+  plans literally share one static KV region.
+* **aliases** — the decode plan's ``cache_new`` outputs update the cache
+  in place on the target; the planner maps an alias onto the exact
+  allocation record of its source tensor (same offset, same size).
 """
 
 from __future__ import annotations
@@ -34,7 +47,9 @@ class MemoryPlan:
     peak: int
 
     def check_no_overlap(self) -> bool:
-        allocs = list(self.allocations.values())
+        # dedupe alias entries (several names -> one allocation record):
+        # an allocation trivially "overlaps" itself in time and space.
+        allocs = list(dict.fromkeys(self.allocations.values()))
         for i, a in enumerate(allocs):
             for b in allocs[i + 1 :]:
                 time_overlap = not (a.end < b.start or b.end < a.start)
@@ -44,8 +59,13 @@ class MemoryPlan:
         return True
 
 
-def lifetimes(g: Graph) -> dict[str, tuple[int, int]]:
-    """{activation tensor: (def index, last-use index)} over the schedule."""
+def lifetimes(g: Graph, persistent: set | frozenset | tuple = ()) -> dict[str, tuple[int, int]]:
+    """{activation tensor: (def index, last-use index)} over the schedule.
+
+    Tensors named in ``persistent`` get the whole-schedule lifetime
+    ``(0, len(nodes) - 1)`` — they must survive across plan invocations
+    (KV caches), so no transient may ever reuse their addresses.
+    """
     out: dict[str, tuple[int, int]] = {}
     for t in g.inputs:
         out[t] = (0, 0)
@@ -60,18 +80,50 @@ def lifetimes(g: Graph) -> dict[str, tuple[int, int]]:
     for t in g.outputs:
         if t in out:
             out[t] = (out[t][0], last)
+    for t in persistent:
+        if t in out:
+            out[t] = (0, last)
     return out
 
 
-def plan_memory(g: Graph, alignment: int = 16) -> MemoryPlan:
-    """Greedy best-fit static allocation for all activation tensors."""
-    lt = lifetimes(g)
-    # allocate in order of definition, largest-first within a timestep
-    order = sorted(lt, key=lambda t: (lt[t][0], -g.tensors[t].bytes))
+def _aligned_size(g: Graph, t: str, alignment: int) -> int:
+    size = max(g.tensors[t].bytes, 1)
+    return (size + alignment - 1) // alignment * alignment
+
+
+def plan_memory(
+    g: Graph,
+    alignment: int = 16,
+    *,
+    persistent: tuple | set | frozenset = (),
+    aliases: dict[str, str] | None = None,
+) -> MemoryPlan:
+    """Greedy best-fit static allocation for all activation tensors.
+
+    ``persistent`` tensors live for the whole schedule and are stacked
+    deterministically at the bottom of the arena (see module docstring);
+    each ``aliases[out] = src`` entry shares ``src``'s allocation record.
+    """
+    aliases = dict(aliases or {})
+    persistent = set(persistent)
+    lt = lifetimes(g, persistent=persistent)
+    for out_name in aliases:
+        lt.pop(out_name, None)  # placed with its alias source below
+    last = max(len(g.nodes) - 1, 0)
     allocs: dict[str, Allocation] = {}
+    cursor = 0
+    for t in sorted(persistent & set(lt)):
+        size = _aligned_size(g, t, alignment)
+        allocs[t] = Allocation(t, cursor, size, 0, last)
+        cursor += size
+    # transients: allocate in order of definition, largest-first within a
+    # timestep, best-fit into the gaps above/around the persistent region
+    order = sorted(
+        (t for t in lt if t not in allocs),
+        key=lambda t: (lt[t][0], -g.tensors[t].bytes),
+    )
     for t in order:
-        size = max(g.tensors[t].bytes, 1)
-        size = (size + alignment - 1) // alignment * alignment
+        size = _aligned_size(g, t, alignment)
         start, end = lt[t]
         # collect live intervals overlapping [start, end]
         blocked = sorted(
@@ -88,13 +140,16 @@ def plan_memory(g: Graph, alignment: int = 16) -> MemoryPlan:
                 best_off, best_gap = cursor, gap
             cursor = max(cursor, top)
         allocs[t] = Allocation(t, best_off, size, start, end)
+    for out_name, src in aliases.items():
+        if src in allocs:
+            allocs[out_name] = allocs[src]
     peak = max((a.offset + a.size for a in allocs.values()), default=0)
     return MemoryPlan(allocs, peak)
 
 
-def peak_lower_bound(g: Graph) -> int:
+def peak_lower_bound(g: Graph, persistent: tuple | set | frozenset = ()) -> int:
     """Max over schedule steps of simultaneously-live activation bytes."""
-    lt = lifetimes(g)
+    lt = lifetimes(g, persistent=persistent)
     best = 0
     for i in range(len(g.nodes)):
         live = sum(

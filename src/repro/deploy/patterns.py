@@ -31,6 +31,14 @@ KIND_BY_OP = {
     "Embed": "embed",
     "Classifier": "classifier",
     "Dequant": "dequant",
+    # decoder / KV-cache ops (cluster kernels; see heterogeneous.py)
+    "Rope": "rope",
+    "AttnPrefill": "attn_causal",
+    "AttnDecode": "attn_cached",
+    "CacheWrite": "cache_write",
+    "SiluMul": "silumul",
+    "LastTok": "lasttok",
+    "LMHead": "lmhead",
 }
 
 
@@ -45,12 +53,19 @@ def node_opdesc(n: Node, granule: int = ITA_GRANULE) -> OpDesc:
     zero rows, which is exact for every op here — while contracting and
     output dims are reported as-is: weights have fixed compiled layouts,
     so their alignment genuinely gates acceleration.
+
+    Exception: a MatMul carrying ``pad_m: False`` reports its row count
+    as-is.  Decode-step GEMMs are really GEMVs (M = 1); padding one row
+    to the M=64 vector length would occupy the accelerator at <2%
+    utilization, so Deeploy's bottom-up rule sends them to the cluster —
+    the predicate must see the degenerate shape to decide that.
     """
     kind = KIND_BY_OP.get(n.op, n.op.lower())
     dims = n.attrs.get("dims", ())
     if n.op == "MatMul":
         m, k, nn = dims
-        return OpDesc(kind, shapes=((_ceil_to(m, granule), k), (k, nn)),
+        mm = _ceil_to(m, granule) if n.attrs.get("pad_m", True) else m
+        return OpDesc(kind, shapes=((mm, k), (k, nn)),
                       act=n.attrs.get("activation", "identity"))
     if n.op in ("MHA", "MHAHead"):
         return OpDesc(kind, shapes=((_ceil_to(n.attrs["seq"], granule),

@@ -96,6 +96,13 @@ class DeploymentPlan:
     schedule: tuple[str, ...]
     tilings: dict[str, dict] = field(default_factory=dict)
     memory_peak: int = 0
+    # decoder-family extensions (defaults keep encoder plans / old JSON valid)
+    phase: str = "forward"  # "forward" | "prefill" | "decode"
+    max_len: int = 0  # KV-cache capacity in tokens (0: no cache)
+    # ((cache_in | None, cache_out), ...) in layer order, K before V.
+    # prefill creates caches (in = None); decode updates them in place
+    # (out aliases in at the same static offset).
+    kv_state: tuple = ()
 
     # -- introspection -------------------------------------------------------
 
@@ -119,6 +126,15 @@ class DeploymentPlan:
             produced.update(n.outputs)
         for t in self.outputs:
             assert t in produced, f"plan output {t} never produced"
+        for cin, cout in self.kv_state:
+            assert cout in produced, f"kv-cache tensor {cout} never produced"
+            if cin is not None:
+                assert cin in self.inputs, f"kv-cache input {cin} not a plan input"
+                a, b = self.tensors[cin], self.tensors[cout]
+                assert a.offset == b.offset and a.size == b.size, (
+                    f"in-place cache update {cin} -> {cout} not aliased "
+                    f"({a.offset}/{a.size} vs {b.offset}/{b.size})"
+                )
         return self
 
     # -- serialization -------------------------------------------------------
@@ -137,6 +153,9 @@ class DeploymentPlan:
             "schedule": list(self.schedule),
             "tilings": self.tilings,
             "memory_peak": self.memory_peak,
+            "phase": self.phase,
+            "max_len": self.max_len,
+            "kv_state": [list(p) for p in self.kv_state],
         }
 
     @staticmethod
@@ -154,6 +173,9 @@ class DeploymentPlan:
             schedule=tuple(d["schedule"]),
             tilings=_tupleize(d.get("tilings", {})),
             memory_peak=int(d.get("memory_peak", 0)),
+            phase=d.get("phase", "forward"),
+            max_len=int(d.get("max_len", 0)),
+            kv_state=tuple((cin, cout) for cin, cout in d.get("kv_state", ())),
         ).validate()
 
     def to_json(self, indent: int | None = None) -> str:
@@ -171,3 +193,84 @@ class DeploymentPlan:
     def load(path: str) -> "DeploymentPlan":
         with open(path) as f:
             return DeploymentPlan.from_json(f.read())
+
+
+@dataclass
+class DecoderPlanPair:
+    """The decoder deployment artifact: two *linked* schedules.
+
+    ``prefill`` processes the whole prompt (causal attention, cache
+    capture, last-token LM head); ``decode`` advances one token against
+    the cache.  The link is the statically planned KV-cache region: both
+    plans allocate the same persistent cache tensors at the same offsets
+    (``validate`` asserts it), so on the target the decode schedule runs
+    directly against the memory the prefill schedule left behind — the
+    Deeploy recipe for autoregressive small-language-model deployment.
+    """
+
+    arch: str
+    seq_len: int  # prompt length the prefill schedule was lowered for
+    max_len: int  # KV-cache capacity in tokens
+    prefill: DeploymentPlan
+    decode: DeploymentPlan
+
+    @property
+    def kv_tensors(self) -> tuple[str, ...]:
+        """Names of the shared persistent cache tensors, layer order."""
+        return tuple(out for _, out in self.prefill.kv_state)
+
+    def counts(self) -> dict[str, dict[str, int]]:
+        return {"prefill": self.prefill.counts(), "decode": self.decode.counts()}
+
+    def validate(self) -> "DecoderPlanPair":
+        self.prefill.validate()
+        self.decode.validate()
+        assert self.prefill.phase == "prefill" and self.decode.phase == "decode"
+        assert self.prefill.max_len == self.decode.max_len == self.max_len
+        dec_in = {cin: cout for cin, cout in self.decode.kv_state}
+        for _, name in self.prefill.kv_state:
+            assert name in dec_in, f"prefill cache {name} not consumed by decode plan"
+            a, b = self.prefill.tensors[name], self.decode.tensors[name]
+            assert a.shape == b.shape, (name, a.shape, b.shape)
+            assert a.offset == b.offset and a.size == b.size, (
+                f"KV region desync for {name}: prefill {a.offset}/{a.size}, "
+                f"decode {b.offset}/{b.size}"
+            )
+        return self
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "seq_len": self.seq_len,
+            "max_len": self.max_len,
+            "prefill": self.prefill.to_dict(),
+            "decode": self.decode.to_dict(),
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "DecoderPlanPair":
+        return DecoderPlanPair(
+            arch=d["arch"],
+            seq_len=int(d["seq_len"]),
+            max_len=int(d["max_len"]),
+            prefill=DeploymentPlan.from_dict(d["prefill"]),
+            decode=DeploymentPlan.from_dict(d["decode"]),
+        ).validate()
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @staticmethod
+    def from_json(s: str) -> "DecoderPlanPair":
+        return DecoderPlanPair.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+
+    @staticmethod
+    def load(path: str) -> "DecoderPlanPair":
+        with open(path) as f:
+            return DecoderPlanPair.from_json(f.read())

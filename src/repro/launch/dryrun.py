@@ -19,10 +19,13 @@ Outputs one JSON per cell under experiments/dryrun/.
 
 Plan-backed model path (the paper's deployment flow, executable):
   PYTHONPATH=src python -m repro.launch.dryrun --arch mobilebert --reduced --via-plan
-lowers the config through the deploy pass pipeline into a DeploymentPlan,
-executes the full encoder forward through the plan executor (dispatch via
-the runtime DispatchTable), and checks the output bit-exactly against the
-model-level ``forward_w8a8`` path on the identical quantized params.
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --reduced --via-plan
+lowers the config through the deploy pass pipeline into its deployment
+artifact — an encoder DeploymentPlan, or a decoder prefill/decode plan
+pair sharing a static KV region — executes it through the plan executor
+(dispatch via the runtime DispatchTable), and checks bit-exactness
+against the model-level ``forward_w8a8`` (encoder) or ``prefill_w8a8`` +
+chained ``decode_step_w8a8`` (decoder) on the identical quantized params.
 """
 
 import argparse
@@ -159,6 +162,93 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str) -> di
     return rec
 
 
+def run_decoder_via_plan(
+    arch: str,
+    *,
+    reduced_cfg: bool,
+    backend: str,
+    batch_size: int,
+    seq_len: int | None,
+    gen_steps: int,
+    out_dir: str,
+) -> int:
+    """Compile -> linked plan pair -> prefill + chained decode; verify the
+    whole trajectory bit-exactly vs prefill_w8a8 / decode_step_w8a8."""
+    import numpy as np
+
+    from repro.configs import reduced
+    from repro.core.heterogeneous import Backend
+    from repro.deploy.executor import make_decoder_executors, plan_and_bind_decoder
+    from repro.models import transformer as T
+
+    cfg = get_config(arch)
+    if reduced_cfg:
+        cfg = reduced(cfg)
+    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    s = seq_len or 32
+    max_len = s + gen_steps + 1
+
+    t0 = time.time()
+    pair, weights, qp = plan_and_bind_decoder(cfg, s, max_len=max_len, backend=be)
+    t_lower = time.time() - t0
+    counts = pair.counts()
+    print(
+        f"[plan   ] {arch}: prefill {counts['prefill']['nodes']} nodes "
+        f"({counts['prefill']['ita']} ita), decode {counts['decode']['nodes']} "
+        f"nodes ({counts['decode']['ita']} ita), KV region "
+        f"{len(pair.kv_tensors)} tensors x {max_len} tokens, "
+        f"lowered in {t_lower:.2f}s"
+    )
+
+    prefill_fn, decode_fn = make_decoder_executors(pair, backend=be)
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (batch_size, s), 0, cfg.vocab, jnp.int32)}
+
+    t0 = time.time()
+    logits, cache = prefill_fn(weights, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, batch, max_len)
+    exact = bool(
+        np.array_equal(np.asarray(logits), np.asarray(ref_logits))
+        and np.array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
+        and np.array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
+    )
+    tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(gen_steps):
+        logits, cache = decode_fn(weights, cache, tok)
+        ref_logits, ref_cache = T.decode_step_w8a8(cfg, qp, ref_cache, tok)
+        exact = exact and bool(
+            np.array_equal(np.asarray(logits), np.asarray(ref_logits))
+            and np.array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
+            and np.array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
+        )
+        tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+    t_decode = time.time() - t0
+
+    status = "ok" if exact else "MISMATCH"
+    print(
+        f"[{status:7s}] decoder plan pair [{be.value}] vs prefill_w8a8 + "
+        f"{gen_steps} x decode_step_w8a8: bit-exact={exact}; "
+        f"prefill {batch_size}x{s} in {t_prefill:.2f}s (compile incl.), "
+        f"decode {t_decode:.3f}s"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    rec = {
+        "arch": arch, "reduced": reduced_cfg, "backend": be.value,
+        "status": "ok" if exact else "mismatch", "bit_exact": exact,
+        "plan": counts, "max_len": max_len, "gen_steps": gen_steps,
+        "memory_peak": {"prefill": pair.prefill.memory_peak,
+                        "decode": pair.decode.memory_peak},
+        "lower_s": round(t_lower, 3),
+    }
+    with open(os.path.join(out_dir, f"{arch}__via_plan_decoder__{be.value}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    pair.save(os.path.join(out_dir, f"{arch}__plan_pair.json"))
+    return 0 if exact else 1
+
+
 def run_via_plan(
     arch: str,
     *,
@@ -167,6 +257,7 @@ def run_via_plan(
     batch_size: int,
     seq_len: int | None,
     head_by_head: bool,
+    gen_steps: int,
     out_dir: str,
 ) -> int:
     """Compile -> plan -> execute one encoder arch; verify vs forward_w8a8."""
@@ -180,8 +271,15 @@ def run_via_plan(
     cfg = get_config(arch)
     if reduced_cfg:
         cfg = reduced(cfg)
+    if cfg.family == "dense" and not cfg.n_experts:
+        return run_decoder_via_plan(
+            arch, reduced_cfg=reduced_cfg, backend=backend, batch_size=batch_size,
+            seq_len=seq_len, gen_steps=gen_steps, out_dir=out_dir,
+        )
     if cfg.family != "encoder":
-        raise SystemExit(f"--via-plan lowers encoder configs; {arch} is {cfg.family}")
+        raise SystemExit(
+            f"--via-plan lowers encoder configs and dense decoders; "
+            f"{arch} is {cfg.family}")
 
     be = Backend.ITA if backend == "ita" else Backend.W8A8
     t0 = time.time()
@@ -253,6 +351,9 @@ def main(argv=None):
                     help="plan-executor backend: XLA integer path or Pallas kernels")
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=2,
+                    help="decoder --via-plan: number of chained decode steps "
+                         "to verify against decode_step_w8a8")
     ap.add_argument("--head-by-head", action="store_true",
                     help="lower with the paper's per-head MHA schedule")
     args = ap.parse_args(argv)
@@ -267,6 +368,7 @@ def main(argv=None):
             batch_size=args.batch,
             seq_len=args.seq,
             head_by_head=args.head_by_head,
+            gen_steps=args.gen,
             out_dir=args.out_dir,
         )
 

@@ -8,11 +8,15 @@ Runnable directly:
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
       --batch 4 --prompt-len 32 --gen 8
 
-Plan-backed serving (encoder family): ``--via-plan`` lowers the config to
-a DeploymentPlan once and serves batched encoder inference through the
-plan executor — the compiled deployment artifact is the model:
+Plan-backed serving: ``--via-plan`` lowers the config to its deployment
+artifact once and serves through the plan executor — the compiled
+artifact is the model.  Encoder family: one forward DeploymentPlan
+(batched inference).  Decoder family: a linked prefill/decode plan pair
+sharing a static KV-cache region (prefill + autoregressive decode loop):
   PYTHONPATH=src python -m repro.launch.serve --arch mobilebert --reduced \
       --via-plan --batch 8 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+      --via-plan --batch 4 --prompt-len 32 --gen 8
 """
 
 from __future__ import annotations
@@ -75,6 +79,50 @@ def serve_via_plan(cfg, *, batch_size: int, steps: int, backend: str) -> None:
     )
 
 
+def serve_decoder_via_plan(cfg, *, batch_size: int, prompt_len: int, gen: int,
+                           backend: str) -> None:
+    """Prefill + autoregressive decode through the compiled plan pair."""
+    from repro.core.heterogeneous import Backend
+    from repro.deploy.executor import make_decoder_executors, plan_and_bind_decoder
+
+    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    t0 = time.time()
+    pair, weights, _ = plan_and_bind_decoder(
+        cfg, prompt_len, max_len=prompt_len + gen + 1, backend=be
+    )
+    prefill_fn, decode_fn = make_decoder_executors(pair, backend=be)
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(
+        key, (batch_size, prompt_len), 0, cfg.vocab, jnp.int32)}
+
+    logits, cache = prefill_fn(weights, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = greedy_token(logits)
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(gen):
+        logits, cache = decode_fn(weights, cache, tok)
+        tok = greedy_token(logits)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    toks = jnp.concatenate(out_tokens, axis=1)
+    counts = pair.counts()
+    print(
+        f"plan-serving [{be.value}] {cfg.name}: prefill plan "
+        f"{counts['prefill']['nodes']} nodes ({counts['prefill']['ita']} ita), "
+        f"decode plan {counts['decode']['nodes']} nodes "
+        f"({counts['decode']['ita']} ita); KV region "
+        f"{len(pair.kv_tensors)} tensors x {pair.max_len} tokens; "
+        f"lower+prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
+        f"decoded {gen} steps in {t_decode:.3f}s "
+        f"({batch_size * gen / max(t_decode, 1e-9):.1f} tok/s)"
+    )
+    print("sample tokens:", toks[0, :8].tolist())
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -83,7 +131,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--via-plan", action="store_true",
-                    help="serve encoder inference through the DeploymentPlan executor")
+                    help="serve through the compiled deployment artifact: encoder "
+                         "DeploymentPlan or decoder prefill/decode plan pair")
     ap.add_argument("--backend", choices=["w8a8", "ita"], default="w8a8")
     args = ap.parse_args(argv)
 
@@ -91,13 +140,17 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced(cfg)
     if args.via_plan:
-        if cfg.family != "encoder":
-            raise SystemExit(
-                f"--via-plan serves encoder plans; {cfg.name} is {cfg.family} "
-                "(use the default prefill/decode path)"
-            )
-        return serve_via_plan(cfg, batch_size=args.batch, steps=args.gen,
-                              backend=args.backend)
+        if cfg.family == "encoder":
+            return serve_via_plan(cfg, batch_size=args.batch, steps=args.gen,
+                                  backend=args.backend)
+        if cfg.family == "dense" and not cfg.n_experts:
+            return serve_decoder_via_plan(
+                cfg, batch_size=args.batch, prompt_len=args.prompt_len,
+                gen=args.gen, backend=args.backend)
+        raise SystemExit(
+            f"--via-plan serves encoder plans and dense decoder plan pairs; "
+            f"{cfg.name} is {cfg.family} (use the default prefill/decode path)"
+        )
     api = build(cfg)
     if api.prefill is None:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode loop (try --via-plan)")

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.attention import (
     MhaQParams,
-    attention_decode_i8,
     attention_f32,
     attention_flash_i8,
 )
@@ -372,9 +371,16 @@ def qlayer_fwd(
     *,
     causal: bool = True,
     kv_override=None,
+    kv_len=None,
     block_k: int = 512,
 ):
-    """One integer transformer layer. x_q int8 [B,S,D] on the s_res grid."""
+    """One integer transformer layer. x_q int8 [B,S,D] on the s_res grid.
+
+    ``kv_override`` may swap in larger K/V tensors (the decode path returns
+    the full KV cache); ``kv_len`` then masks the unwritten tail inside the
+    flash attention.  Prefill, full forward and single-token decode all run
+    THIS function — one source of truth for the integer arithmetic.
+    """
     st = _sites(cfg, q)
     h_q = L.norm_apply_i8(cfg.norm, lp["norm1"], x_q, _S_GAMMA, q.s_act)
     qkv = L.qlinear(lp["attn"]["wqkv"], h_q, st["wqkv"])
@@ -386,7 +392,8 @@ def qlayer_fwd(
     if kv_override is not None:
         kh, vh = kv_override(kh, vh)
     bk = min(block_k, kh.shape[2])
-    out = attention_flash_i8(qh, kh, vh, st["mha"], causal=causal, block_k=bk)
+    out = attention_flash_i8(qh, kh, vh, st["mha"], causal=causal, block_k=bk,
+                             kv_len=kv_len)
     out = L.qlinear(lp["attn"]["wo"], _merge_heads(out), st["wo"])
     x_q = L.iadd_i8(x_q, out, *st["res_attn"])
 
@@ -491,48 +498,32 @@ def decode_step_w8a8(
     q: L.QuantConfig = L.QuantConfig(),
     block_k: int = 2048,
 ):
+    """One-token decode against the int8 KV cache.
+
+    Runs the SAME ``qlayer_fwd`` integer path as prefill (so the two paths
+    cannot drift): the KV override appends this step's K/V to the cache and
+    returns the full cache tensors, and ``kv_len`` masks the unwritten tail
+    inside the flash attention — bit-identical to attending only the first
+    ``pos + 1`` cache rows.
+    """
     x_q = qp["embed"]["table_q"][token]
     pos = cache["len"]
-    st = _sites(cfg, q)
     b = x_q.shape[0]
 
     def body(x, xs):
         lp, kc, vc = xs
-        h_q = L.norm_apply_i8(cfg.norm, lp["norm1"], x, _S_GAMMA, q.s_act)
-        qkv = L.qlinear(lp["attn"]["wqkv"], h_q, st["wqkv"])
-        qh, kh, vh = _split_heads(qkv, cfg)
-        if cfg.rope:
-            c_q, s_q = L.rope_tables_i8(jnp.asarray([pos]), cfg.head_dim, cfg.rope_theta)
-            qh = L.apply_rope_i8(qh, c_q, s_q)
-            kh = L.apply_rope_i8(kh, c_q, s_q)
-        kc = jax.lax.dynamic_update_slice(kc, kh, (0, 0, pos, 0))
-        vc = jax.lax.dynamic_update_slice(vc, vh, (0, 0, pos, 0))
-        out = attention_decode_i8(
-            qh, kc, vc, jnp.full((b,), pos + 1, jnp.int32), st["mha"],
-            block_k=min(block_k, kc.shape[2]),
-        )
-        out = L.qlinear(lp["attn"]["wo"], _merge_heads(out), st["wo"])
-        x = L.iadd_i8(x, out, *st["res_attn"])
-        h_q = L.norm_apply_i8(cfg.norm, lp["norm2"], x, _S_GAMMA, q.s_act)
-        if cfg.n_experts:
-            from repro.models import moe as moe_mod
+        written = {}
 
-            m = moe_mod.moe_ffn_w8a8(cfg, lp["mlp"], h_q, q)
-        elif cfg.mlp == "swiglu":
-            g = L.qlinear(lp["mlp"]["gate"], h_q, st["gate"])
-            u = L.qlinear(lp["mlp"]["up"], h_q, st["up"])
-            sg = L.isilu_i8(g, q.s_act, q.s_act)
-            qprod = make_qparams(q.s_act, q.s_act, q.s_act)
-            h2 = requantize(jnp.asarray(sg, jnp.int32) * u, qprod.mult, qprod.shift)
-            m = L.qlinear(lp["mlp"]["down"], h2, st["down"])
-        else:
-            pre = L.qlinear(
-                lp["mlp"]["up"], h_q,
-                L.QLinearSite(q.s_act, q.s_w, q.s_act, act=2, s_preact=q.s_act),
-            )
-            m = L.qlinear(lp["mlp"]["down"], pre, st["down"])
-        x = L.iadd_i8(x, m, *st["res_mlp"])
-        return x, (kc, vc)
+        def append(kh, vh):
+            written["k"] = jax.lax.dynamic_update_slice(kc, kh, (0, 0, pos, 0))
+            written["v"] = jax.lax.dynamic_update_slice(vc, vh, (0, 0, pos, 0))
+            return written["k"], written["v"]
+
+        x = qlayer_fwd(
+            cfg, lp, x, jnp.asarray([pos]), q, causal=False, kv_override=append,
+            kv_len=jnp.full((b, 1, 1, 1), pos + 1, jnp.int32), block_k=block_k,
+        )
+        return x, (written["k"], written["v"])
 
     x_q, (ks, vs) = jax.lax.scan(body, x_q, (qp["layers"], cache["k"], cache["v"]))
     new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}

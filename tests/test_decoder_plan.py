@@ -1,0 +1,225 @@
+"""Decoder deployment plans: linked prefill/decode schedules + KV region.
+
+Acceptance contract (ISSUE 2): plan-executed decoder inference is
+*bit-exact* against ``prefill_w8a8`` + chained ``decode_step_w8a8`` on the
+same quantized params — fused-vs-sliced QKV, GQA, RoPE — on both backends;
+the two schedules share one statically planned persistent KV-cache region;
+and engine placement follows ``ita_supports`` (prefill GEMMs accelerate,
+M=1 decode GEMVs fall to the cluster).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ArchConfig
+from repro.core import heterogeneous as het
+from repro.deploy.executor import (
+    execute_decode,
+    execute_prefill,
+    make_decoder_executors,
+    plan_and_bind_decoder,
+)
+from repro.deploy.lowering import lower, lower_decoder
+from repro.deploy.patterns import node_opdesc
+from repro.deploy.plan import DecoderPlanPair
+from repro.models import transformer as T
+
+SEQ, GEN = 16, 3
+MAX_LEN = SEQ + GEN + 1
+
+
+@pytest.fixture(scope="module")
+def olmo_setup():
+    """reduced olmo-1b: GQA (4 q / 2 kv heads), RoPE, SwiGLU,
+    non-parametric LN, tied embeddings."""
+    cfg = reduced(get_config("olmo-1b"))
+    key = jax.random.PRNGKey(7)
+    params = T.init_params(cfg, key)
+    pair, weights, qp = plan_and_bind_decoder(cfg, SEQ, max_len=MAX_LEN, params=params)
+    batch = {"tokens": jax.random.randint(key, (2, SEQ), 0, cfg.vocab, jnp.int32)}
+    return cfg, pair, weights, qp, batch
+
+
+def _assert_chain_bit_exact(cfg, pair, weights, qp, batch, backend, steps=GEN):
+    """Prefill then `steps` chained decode steps, plan vs model, all exact."""
+    logits, cache = execute_prefill(pair, weights, batch, backend=backend)
+    ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, batch, pair.max_len)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    np.testing.assert_array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
+    np.testing.assert_array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
+    tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        logits, cache = execute_decode(pair, weights, cache, tok, backend=backend)
+        ref_logits, ref_cache = T.decode_step_w8a8(cfg, qp, ref_cache, tok)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+        np.testing.assert_array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
+        np.testing.assert_array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
+        assert int(cache["len"]) == int(ref_cache["len"])
+        tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+
+
+class TestBitExactness:
+    def test_w8a8_backend_matches_model_chain(self, olmo_setup):
+        cfg, pair, weights, qp, batch = olmo_setup
+        _assert_chain_bit_exact(cfg, pair, weights, qp, batch, het.Backend.W8A8)
+
+    def test_ita_backend_matches_model_chain(self):
+        """Pallas kernels (interpret on CPU) on the prefill GEMMs produce
+        the identical ints through the whole prefill+decode trajectory."""
+        cfg = reduced(get_config("olmo-1b"))
+        pair, weights, qp = plan_and_bind_decoder(
+            cfg, SEQ, max_len=MAX_LEN, backend=het.Backend.ITA
+        )
+        key = jax.random.PRNGKey(3)
+        batch = {"tokens": jax.random.randint(key, (1, SEQ), 0, cfg.vocab, jnp.int32)}
+        _assert_chain_bit_exact(cfg, pair, weights, qp, batch, het.Backend.ITA, steps=2)
+
+    def test_jitted_executors(self, olmo_setup):
+        """The jit-compiled closures produce the same ints as eager."""
+        cfg, pair, weights, qp, batch = olmo_setup
+        prefill_fn, decode_fn = make_decoder_executors(pair)
+        logits, cache = prefill_fn(weights, batch)
+        ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, batch, pair.max_len)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+        tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+        logits, cache = decode_fn(weights, cache, tok)
+        ref_logits, _ = T.decode_step_w8a8(cfg, qp, ref_cache, tok)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+
+    @pytest.mark.parametrize("kw", [
+        dict(qkv_bias=True, mlp="gelu", norm="layernorm", tie_embeddings=False),
+        dict(mlp="swiglu", norm="rmsnorm", tie_embeddings=True, rope=False),
+    ], ids=["qkv-bias-gelu-untied", "rmsnorm-norope-tied"])
+    def test_config_variants(self, kw):
+        """Biased QKV slicing, fused-GELU MLP, untied LM head, no-RoPE."""
+        cfg = ArchConfig(name="variant", family="dense", n_layers=2, d_model=128,
+                         n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, vocab=512,
+                         max_seq=64, **kw)
+        pair, weights, qp = plan_and_bind_decoder(cfg, 12, max_len=16)
+        key = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(key, (2, 12), 0, cfg.vocab, jnp.int32)}
+        _assert_chain_bit_exact(cfg, pair, weights, qp, batch, het.Backend.W8A8, steps=2)
+
+
+class TestKVRegion:
+    def test_shared_static_offsets(self, olmo_setup):
+        """The link: every cache tensor has identical offset/size in both
+        plans, and the decode in-place update aliases its input."""
+        _, pair, _, _, _ = olmo_setup
+        pair.validate()
+        assert pair.kv_tensors  # 2 per layer
+        offsets = []
+        for name in pair.kv_tensors:
+            a, b = pair.prefill.tensors[name], pair.decode.tensors[name]
+            assert a.offset == b.offset and a.size == b.size
+            offsets.append((a.offset, a.size))
+            out = pair.decode.tensors[name + "_new"]
+            assert out.offset == a.offset and out.size == a.size
+        # the persistent region is contiguous from offset 0, no overlap
+        offsets.sort()
+        assert offsets[0][0] == 0
+        for (o1, s1), (o2, _) in zip(offsets, offsets[1:]):
+            assert o1 + s1 <= o2
+
+    def test_persistent_lifetimes_span_schedule(self):
+        """In the lowered graphs the cache tensors must never be recycled:
+        whole-schedule lifetimes, disjoint from every transient."""
+        from repro.deploy import memory as memlib
+        from repro.deploy.lowering import build_runtime_decoder_graph
+        from repro.deploy.lowering import schedule as topo
+
+        cfg = reduced(get_config("olmo-1b"))
+        for phase in ("prefill", "decode"):
+            g, kv_state = build_runtime_decoder_graph(cfg, SEQ, phase=phase,
+                                                      max_len=MAX_LEN)
+            g.nodes = topo(g)
+            persistent = tuple(cin or cout for cin, cout in kv_state)
+            aliases = {cout: cin for cin, cout in kv_state if cin}
+            mem = memlib.plan_memory(g, persistent=persistent, aliases=aliases)
+            assert mem.check_no_overlap()
+            for t in persistent:
+                a = mem.allocations[t]
+                assert (a.start, a.end) == (0, len(g.nodes) - 1)
+
+    def test_pair_json_round_trip(self, olmo_setup):
+        _, pair, _, _, _ = olmo_setup
+        restored = DecoderPlanPair.from_json(pair.to_json())
+        assert restored == pair
+
+    def test_lower_dispatches_to_pair(self):
+        cfg = reduced(get_config("olmo-1b"))
+        art = lower(cfg, SEQ, max_len=MAX_LEN)
+        assert isinstance(art, DecoderPlanPair)
+        with pytest.raises(NotImplementedError):
+            lower(reduced(get_config("mamba2-370m")))
+
+
+class TestEnginePlacement:
+    def test_prefill_accelerates_decode_falls_back(self, olmo_setup):
+        """The paper split at both phases: aligned prefill GEMMs on ITA;
+        M=1 decode GEMVs (pad_m: False) on the cluster."""
+        _, pair, _, _, _ = olmo_setup
+        pre_gemms = [n for n in pair.prefill.nodes if n.op == "MatMul"]
+        dec_gemms = [n for n in pair.decode.nodes if n.op == "MatMul"]
+        assert pre_gemms and all(n.engine == "ita" for n in pre_gemms)
+        assert dec_gemms and all(n.engine == "cluster" for n in dec_gemms)
+        # attention / rope / cache ops are cluster kernels in both phases
+        for plan in (pair.prefill, pair.decode):
+            for n in plan.nodes:
+                if n.op in ("Rope", "AttnPrefill", "AttnDecode", "CacheWrite",
+                            "SiluMul", "LastTok", "LMHead"):
+                    assert n.engine == "cluster", (n.name, n.engine)
+
+    @pytest.mark.parametrize("backend", [het.Backend.W8A8, het.Backend.ITA])
+    def test_static_engines_agree_with_runtime_resolve(self, backend):
+        """Satellite: the plan's static engine column must equal what
+        ``DispatchTable.resolve`` does at run time, per backend granule —
+        the naming-trap regression (PALLAS vs ASIC granule)."""
+        cfg = reduced(get_config("olmo-1b"))
+        granule = het.backend_granule(backend)
+        pair = lower_decoder(cfg, SEQ, max_len=MAX_LEN, granule=granule)
+        for plan in (pair.prefill, pair.decode):
+            for n in plan.nodes:
+                desc = node_opdesc(n, granule)
+                engine, _ = het.DEFAULT_TABLE.resolve(desc, backend)
+                assert n.engine == engine.value, (plan.phase, n.name, n.engine,
+                                                  engine.value)
+
+    def test_backend_granule_aliases(self):
+        """ITA backend == Pallas kernels == TPU granule; W8A8 == ASIC."""
+        assert het.backend_granule(het.Backend.ITA) == het.PALLAS_GRANULE == het.TPU_GRANULE
+        assert het.backend_granule(het.Backend.W8A8) == het.ASIC_GRANULE == het.ITA_GRANULE
+        assert het.backend_granule(het.Backend.FLOAT) == het.ASIC_GRANULE
+
+
+class TestModelPathParity:
+    def test_prefill_vs_decode_parity(self):
+        """The two integer paths cannot drift: prefilling N+1 tokens equals
+        prefilling N then decoding the (N+1)-th, bit for bit (same flash
+        blocking at these sizes; satellite regression for the swiglu
+        dtype-promotion split)."""
+        cfg = reduced(get_config("olmo-1b"))
+        key = jax.random.PRNGKey(11)
+        qp = T.quantize_params(cfg, T.init_params(cfg, key))
+        toks = jax.random.randint(key, (2, SEQ), 0, cfg.vocab, jnp.int32)
+
+        full_logits, full_cache = T.prefill_w8a8(cfg, qp, {"tokens": toks}, MAX_LEN)
+        part_logits, cache = T.prefill_w8a8(
+            cfg, qp, {"tokens": toks[:, : SEQ - 1]}, MAX_LEN)
+        step_logits, cache = T.decode_step_w8a8(cfg, qp, cache, toks[:, SEQ - 1 :])
+        np.testing.assert_array_equal(np.asarray(full_logits), np.asarray(step_logits))
+        np.testing.assert_array_equal(
+            np.asarray(full_cache["k"][:, :, :, :SEQ]),
+            np.asarray(cache["k"][:, :, :, :SEQ]))
+
+    def test_decode_swiglu_matches_qlayer(self):
+        """decode_step_w8a8 literally runs qlayer_fwd now — one source of
+        truth for the swiglu integer product (no dtype-promotion drift)."""
+        import inspect
+
+        src = inspect.getsource(T.decode_step_w8a8)
+        assert "qlayer_fwd" in src
+        assert "isilu_i8" not in src  # no duplicated MLP arithmetic

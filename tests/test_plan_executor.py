@@ -20,9 +20,10 @@ from repro.deploy.executor import (
     make_jit_executor,
     plan_and_bind,
 )
+from repro.deploy.executor import _run_node
 from repro.deploy.lowering import build_runtime_encoder_graph, lower, schedule
 from repro.deploy.patterns import deploy_pipeline, node_opdesc
-from repro.deploy.plan import DeploymentPlan
+from repro.deploy.plan import DeploymentPlan, PlanNode
 from repro.models import encoder as EN
 
 
@@ -153,6 +154,42 @@ class TestEngineAssignment:
         plan = lower(cfg)
         mha = [n for n in plan.nodes if n.op == "MHA"]
         assert mha and all(n.engine == "ita" for n in mha)
+
+
+class TestGemmActivations:
+    """Satellite regression: the GEMM runner must execute every activation
+    the plan vocabulary admits, and fail loudly on anything else — the old
+    code silently mapped unknown activations to identity."""
+
+    def _node_and_env(self, act):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.randint(key, (1, 8, 64), -127, 128, jnp.int8)
+        w = jax.random.randint(key, (64, 64), -127, 128, jnp.int8)
+        node = PlanNode(
+            name="g0", op="MatMul", kind="gemm", engine="cluster",
+            inputs=("x", "w"), outputs=("y",),
+            attrs={"dims": (8, 64, 64), "scales": (0.05, 0.01, 0.05),
+                   "activation": act},
+        )
+        return node, {"x": x, "w": w}
+
+    def test_relu_executes_relu(self):
+        from repro.core.quant_linear import ACT_RELU, make_qlinear_params, qlinear_i8
+
+        node, env = self._node_and_env("relu")
+        got = _run_node(node, env, het.DEFAULT_TABLE, het.Backend.W8A8)
+        want = qlinear_i8(env["x"], env["w"], None,
+                          make_qlinear_params(0.05, 0.01, 0.05, ACT_RELU))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and relu is genuinely not identity on this data
+        iden, _ = self._node_and_env("identity")
+        got_id = _run_node(iden, env, het.DEFAULT_TABLE, het.Backend.W8A8)
+        assert not np.array_equal(np.asarray(got), np.asarray(got_id))
+
+    def test_unknown_activation_raises(self):
+        node, env = self._node_and_env("swish")
+        with pytest.raises(NotImplementedError, match="swish"):
+            _run_node(node, env, het.DEFAULT_TABLE, het.Backend.W8A8)
 
 
 class TestDefaultTable:

@@ -46,27 +46,70 @@ class TestTilerProperties:
         assert t.useful_ops == 2 * m * n * k
 
 
+def _random_graph(rng) -> Graph:
+    """Random branching DAG over 2-D int8 tensors (shared helper)."""
+    g = Graph()
+    live = [g.add_tensor("in", (int(rng.integers(1, 64)), 32))]
+    g.inputs.append("in")
+    for i in range(int(rng.integers(2, 25))):
+        src = [live[int(rng.integers(0, len(live)))]]
+        if rng.random() < 0.4 and len(live) > 1:
+            src.append(live[int(rng.integers(0, len(live)))])
+        out = g.add_tensor(f"t{i}", (int(rng.integers(1, 64)), 32))
+        g.add_node("Add" if len(src) > 1 else "LayerNorm", src, [out],
+                   dims=g.tensors[out].shape)
+        live.append(out)
+    g.outputs.append(live[-1])
+    return g
+
+
 class TestMemoryPlannerProperties:
     @given(seed=st.integers(0, 10_000))
     @settings(max_examples=25, deadline=None)
     def test_property_random_graphs_no_overlap(self, seed):
         """Random branching DAGs: planner must never alias live tensors."""
-        rng = np.random.default_rng(seed)
-        g = Graph()
-        live = [g.add_tensor("in", (int(rng.integers(1, 64)), 32))]
-        g.inputs.append("in")
-        for i in range(int(rng.integers(2, 25))):
-            src = [live[int(rng.integers(0, len(live)))]]
-            if rng.random() < 0.4 and len(live) > 1:
-                src.append(live[int(rng.integers(0, len(live)))])
-            out = g.add_tensor(f"t{i}", (int(rng.integers(1, 64)), 32))
-            g.add_node("Add" if len(src) > 1 else "LayerNorm", src, [out],
-                       dims=g.tensors[out].shape)
-            live.append(out)
-        g.outputs.append(live[-1])
+        g = _random_graph(np.random.default_rng(seed))
         plan = memory.plan_memory(g)
         assert plan.check_no_overlap()
         assert plan.peak >= memory.peak_lower_bound(g)
+
+    @given(seed=st.integers(0, 10_000), n_pers=st.integers(1, 6))
+    @settings(max_examples=25, deadline=None)
+    def test_property_persistent_no_overlap_and_bounded(self, seed, n_pers):
+        """KV-cache-style persistent tensors (whole-schedule lifetimes):
+        no aliasing with any transient, peak bracketed by the lower bound
+        and the everything-is-live upper bound."""
+        rng = np.random.default_rng(seed)
+        g = _random_graph(rng)
+        names = list(g.tensors)
+        persistent = tuple(
+            names[int(rng.integers(0, len(names)))] for _ in range(n_pers)
+        )
+        plan = memory.plan_memory(g, persistent=persistent)
+        assert plan.check_no_overlap()
+        last = len(g.nodes) - 1
+        for t in set(persistent):
+            a = plan.allocations[t]
+            assert (a.start, a.end) == (0, last)
+        lb = memory.peak_lower_bound(g, persistent=persistent)
+        total = sum(
+            (max(g.tensors[t].bytes, 1) + 15) // 16 * 16 for t in plan.allocations
+        )
+        assert lb <= plan.peak <= total
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_alias_shares_allocation(self, seed):
+        """An aliased output (in-place cache update) maps onto the exact
+        allocation record of its source."""
+        rng = np.random.default_rng(seed)
+        g = _random_graph(rng)
+        # pretend the graph output updates the input in place
+        plan = memory.plan_memory(
+            g, persistent=("in",), aliases={g.outputs[0]: "in"}
+        )
+        assert plan.check_no_overlap()
+        assert plan.allocations[g.outputs[0]] == plan.allocations["in"]
 
 
 class TestISqrtProperties:
