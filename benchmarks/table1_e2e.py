@@ -81,28 +81,29 @@ def run(fit: bool = True):
     return rows, residuals, hw
 
 
-def measure_plan_executor(names=None, *, backend: str = "w8a8", iters: int = 3,
-                          hw=None):
+def measure_plan_executor(names=None, *, backend="w8a8", iters: int = 3,
+                          hw=None, cache_dir=None, use_cache: bool = True):
     """Measured plan-executor time vs cost-model prediction, per network.
 
-    Lowers each network's *runtime* graph (``include_head=False`` keeps the
-    scope at the encoder stack, like the paper's GOp counts), executes the
-    jitted plan on the host, and evaluates the calibrated cycle model on
-    the identical graph.  Returns one row per network with both numbers
-    and their ratio — the tracked prediction error.
+    Each network goes through the unified API — ``compile()`` (plan
+    cache on, so repeated benchmark runs skip re-lowering) ->
+    ``InferenceSession.forward`` — with ``include_head=False`` to keep
+    the scope at the encoder stack, like the paper's GOp counts; the
+    calibrated cycle model is evaluated on the identical graph.  Returns
+    one row per network with both numbers and their ratio — the tracked
+    prediction error.
     """
     import jax
+    import jax.numpy as jnp
 
-    from repro.core.heterogeneous import Backend
-    from repro.deploy.executor import make_jit_executor, plan_and_bind
+    from repro.core.heterogeneous import as_backend, backend_granule
+    from repro.deploy import api
     from repro.deploy.lowering import build_runtime_encoder_graph
-
-    from repro.core.heterogeneous import ITA_GRANULE, TPU_GRANULE
 
     names = list(PAPER) if names is None else names
     hw = hw or costmodel.HW
-    be = Backend.ITA if backend == "ita" else Backend.W8A8
-    granule = TPU_GRANULE if be is Backend.ITA else ITA_GRANULE
+    be = as_backend(backend)
+    granule = backend_granule(be)
     rows = []
     for name in names:
         cfg = get_config(name)
@@ -111,27 +112,27 @@ def measure_plan_executor(names=None, *, backend: str = "w8a8", iters: int = 3,
         g = patterns.deploy_pipeline(g, head_by_head=False, granule=granule)
         pred = costmodel.network_cost(g, hw)
 
-        plan, weights, _ = plan_and_bind(cfg, seq, include_head=False, backend=be)
-        fn = make_jit_executor(plan, backend=be)
+        model = api.compile(cfg, backend=be, seq_len=seq, include_head=False,
+                            cache_dir=cache_dir, use_cache=use_cache)
+        session = model.session(1)
         key = jax.random.PRNGKey(0)
-        in_name = plan.inputs[0]
-        import jax.numpy as jnp
-
+        in_name = model.artifact.inputs[0]
         if in_name == "tokens":
-            batch = {in_name: jax.random.randint(key, (1, seq), 0, cfg.vocab, jnp.int32)}
+            x = jax.random.randint(key, (1, seq), 0, cfg.vocab, jnp.int32)
         else:
-            batch = {in_name: jax.random.randint(key, (1, seq, cfg.d_model), -64, 64, jnp.int8)}
-        jax.block_until_ready(fn(weights, batch))  # compile
+            x = jax.random.randint(key, (1, seq, cfg.d_model), -64, 64, jnp.int8)
+        jax.block_until_ready(session.forward(x))  # compile
         times = []
         for _ in range(iters):
             t0 = time.time()
-            jax.block_until_ready(fn(weights, batch))
+            jax.block_until_ready(session.forward(x))
             times.append(time.time() - t0)
         meas_s = sorted(times)[len(times) // 2]
         rows.append(
             {
                 "network": name,
                 "backend": be.value,
+                "plan_cache": "hit" if model.cache_hit else "miss",
                 "gop_runtime_graph": round(pred.gop, 2),
                 "pred_ms_asic": round(pred.t_total_s * 1e3, 2),
                 "meas_ms_host": round(meas_s * 1e3, 2),
@@ -151,10 +152,13 @@ def _print_rows(rows):
 
 
 def main(argv=None):
+    from repro.launch.cli import parse_backend, plan_backend_names
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-measure", action="store_true",
                     help="skip the measured plan-executor table")
-    ap.add_argument("--backend", choices=["w8a8", "ita"], default="w8a8")
+    ap.add_argument("--backend", type=parse_backend, default="w8a8",
+                    metavar="|".join(plan_backend_names()))
     ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args([] if argv is None else argv)
 

@@ -73,6 +73,24 @@ def backend_granule(backend: "Backend") -> int:
     return PALLAS_GRANULE if backend is Backend.ITA else ASIC_GRANULE
 
 
+def as_backend(backend: "Backend | str") -> "Backend":
+    """Normalize a backend given as enum or name string, once, at the API
+    boundary.  Every executor/compile entry point routes through this, so
+    ``backend="ita"`` and ``backend=Backend.ITA`` are interchangeable
+    everywhere and unknown names fail with the valid vocabulary."""
+    if isinstance(backend, Backend):
+        return backend
+    if isinstance(backend, str):
+        try:
+            return Backend(backend.lower())
+        except ValueError:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of "
+                f"{sorted(b.value for b in Backend)}"
+            ) from None
+    raise TypeError(f"backend must be a Backend or name string, got {type(backend)!r}")
+
+
 def ita_supports(op: OpDesc, granule: int = ITA_GRANULE) -> bool:
     """Would ITA (resp. the Pallas kernel set) accept this op?
 
@@ -344,6 +362,12 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
     def _rope(x_q, positions, *, heads, head_dim, theta):
         positions = jnp.asarray(positions).reshape(-1)
         c_q, s_q = L.rope_tables_i8(positions, head_dim, theta)
+        if x_q.shape[1] == 1 and positions.shape[0] == x_q.shape[0]:
+            # per-request decode positions: row b rotates by its own angle
+            # tables [B, D/2] -> [B, 1, 1, D/2] (broadcast over heads, S=1);
+            # for B = 1 this is the same broadcast as the scalar-pos path,
+            # bit for bit.
+            c_q, s_q = c_q[:, None, None, :], s_q[:, None, None, :]
         return _merge(L.apply_rope_i8(_split(x_q, heads, head_dim), c_q, s_q))
 
     table.register("rope", Engine.CLUSTER, _rope)
@@ -362,7 +386,12 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
     def _attn_cached(q_m, k_cache, v_cache, pos, *, heads, head_dim, s_act, s_out, block_k):
         p = MhaQParams.make_flash(s_act, s_act, s_act, s_out, max(head_dim, 1))
         qh = _split(q_m, heads, head_dim)
-        kv_len = jnp.full((qh.shape[0],), pos + 1, jnp.int32)
+        # pos may be a scalar (every request at the same depth) or a [B]
+        # per-request vector (continuous batching); either way request b
+        # attends exactly its first pos_b + 1 cache rows.
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1) + 1, (qh.shape[0],)
+        )
         out = attention_decode_i8(
             qh, k_cache, v_cache, kv_len, p, block_k=min(block_k, k_cache.shape[2])
         )
@@ -375,6 +404,11 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
         if cache is None:  # prefill: fresh cache, rows [0, S) written
             cache = jnp.zeros((kh.shape[0], kv_heads, max_len, head_dim), jnp.int8)
             pos = 0
+        if jnp.ndim(pos) == 1:
+            # per-request write rows: slot b appends at its own depth
+            return jax.vmap(
+                lambda c, k, p: jax.lax.dynamic_update_slice(c, k, (0, p, 0))
+            )(cache, kh, jnp.asarray(pos, jnp.int32))
         return jax.lax.dynamic_update_slice(cache, kh, (0, 0, pos, 0))
 
     table.register("cache_write", Engine.CLUSTER, _cache_write)

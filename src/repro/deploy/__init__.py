@@ -12,9 +12,17 @@ sharing one persistent, statically planned KV-cache region (decoder
 family); ``executor`` runs the plans as jitted JAX functions, resolving
 every node through the runtime DispatchTable (Pallas kernels on the
 accelerator engine, XLA fallbacks on the cluster).
+
+``api`` is the one inference surface over all of it:
+``compile(cfg) -> CompiledModel -> InferenceSession`` with an on-disk
+plan cache keyed by (config fingerprint, compiler version) and batched
+continuous decoding (per-request ``pos`` vectors).  The pre-API entry
+points in ``executor`` (``plan_and_bind*``, ``make_*_executor*``) are
+deprecated shims over it, kept for one release.
 """
 
 from repro.deploy import (  # noqa: F401
+    api,
     costmodel,
     executor,
     graph,
@@ -24,4 +32,13 @@ from repro.deploy import (  # noqa: F401
     patterns,
     plan,
     tiler,
+)
+from repro.deploy.api import (  # noqa: F401
+    COMPILER_VERSION,
+    CompiledModel,
+    InferenceSession,
+    UnsupportedFamilyError,
+    compile,
+    config_fingerprint,
+    is_dense_decoder,
 )

@@ -1,0 +1,511 @@
+"""One inference API: ``compile() -> CompiledModel -> InferenceSession``.
+
+The paper's deployment flow (§IV) ends in a *single* deployable artifact;
+this module is that artifact's programming surface.  ``compile(cfg)``
+lowers a config through the pass pipeline into its deployment artifact —
+an encoder :class:`~repro.deploy.plan.DeploymentPlan` or a decoder
+:class:`~repro.deploy.plan.DecoderPlanPair` — wrapped in a
+:class:`CompiledModel` that carries a stable config fingerprint and the
+``COMPILER_VERSION`` it was produced by, serializes to JSON, and is
+cached on disk: a second ``compile()`` of the same (config, options,
+compiler version) deserializes the plan instead of re-lowering it, and a
+bump of either the compiler version or the config hash invalidates the
+entry.
+
+``CompiledModel.session(batch_size)`` binds quantized weights and
+returns an :class:`InferenceSession` — the one runtime surface for both
+families:
+
+* encoder: ``forward(x)`` — batched plan execution;
+* decoder: ``prefill(tokens)`` / ``decode(tokens, pos)`` where ``pos``
+  is a **per-request vector**: a batch of requests at *different*
+  generation depths advances in one dispatch against one statically
+  planned, batched KV region (continuous batching from a single plan,
+  cf. the prefill/decode phase split of arXiv 2405.19284).
+  ``prefill_slot(i, tokens)`` admits a new request into a finished slot
+  while the others keep decoding.
+
+Everything here is bit-exact against the model-level ``w8a8`` integer
+path — including a cache-loaded plan vs a freshly lowered one (the JSON
+round trip is lossless; tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.heterogeneous import (
+    Backend,
+    DispatchTable,
+    as_backend,
+    backend_granule,
+)
+from repro.deploy.lowering import (  # noqa: F401 (re-exports)
+    UnsupportedFamilyError,
+    is_dense_decoder,
+    lower,
+)
+from repro.deploy.plan import DecoderPlanPair, DeploymentPlan
+
+#: Bumped whenever lowering/executor changes can alter plan *content* or
+#: *semantics*.  Cached plans from other versions are recompiled.
+COMPILER_VERSION = 3
+
+_PAYLOAD_FORMAT = "repro.deploy.api/compiled-model"
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint + on-disk plan cache
+# ---------------------------------------------------------------------------
+
+def default_cache_dir() -> str:
+    """``$REPRO_PLAN_CACHE`` or ``~/.cache/repro/plans``."""
+    return os.environ.get("REPRO_PLAN_CACHE") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "plans"
+    )
+
+
+def config_fingerprint(cfg: ArchConfig, options: dict | None = None) -> str:
+    """Stable hash of (full config, resolved lowering options).
+
+    The compiler version is deliberately *not* part of the fingerprint —
+    it is stored (and checked) separately in the cache payload, so a
+    version bump invalidates entries in place instead of leaking stale
+    files under new keys.
+    """
+    payload = {
+        "config": dataclasses.asdict(cfg),
+        "options": dict(sorted((options or {}).items())),
+    }
+    blob = json.dumps(payload, sort_keys=True, default=repr).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _cache_path(cache_dir: str, cfg: ArchConfig, fingerprint: str) -> str:
+    safe = "".join(c if (c.isalnum() or c in "-_.") else "_" for c in cfg.name)
+    return os.path.join(cache_dir, f"{safe}-{fingerprint[:16]}.plan.json")
+
+
+def _artifact_from_payload(payload: dict) -> DeploymentPlan | DecoderPlanPair:
+    if payload["kind"] == "pair":
+        return DecoderPlanPair.from_dict(payload["artifact"])
+    return DeploymentPlan.from_dict(payload["artifact"])
+
+
+def _cache_load(path: str, fingerprint: str):
+    """Deserialized artifact on a hit; None on any miss (absent, stale
+    compiler version, fingerprint mismatch, or corrupt file)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != _PAYLOAD_FORMAT:
+            return None
+        if payload.get("compiler_version") != COMPILER_VERSION:
+            return None
+        if payload.get("fingerprint") != fingerprint:
+            return None
+        return _artifact_from_payload(payload)
+    except (OSError, ValueError, KeyError, AssertionError):
+        return None
+
+
+def _cache_store(path: str, payload: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)  # atomic publish: readers never see partial JSON
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+# ---------------------------------------------------------------------------
+# CompiledModel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledModel:
+    """The single deployable artifact: plan(s) + identity + weights binder."""
+
+    cfg: ArchConfig
+    backend: Backend
+    artifact: DeploymentPlan | DecoderPlanPair
+    fingerprint: str
+    compiler_version: int
+    options: dict
+    cache_hit: bool = False
+    cache_path: str | None = None
+
+    @property
+    def kind(self) -> str:
+        return "decoder" if isinstance(self.artifact, DecoderPlanPair) else "encoder"
+
+    def counts(self) -> dict:
+        return self.artifact.counts()
+
+    # -- weights -----------------------------------------------------------
+
+    def bind(self, params: dict | None = None, *, key=None) -> tuple[dict, dict]:
+        """(float init ->) PTQ quantize -> bind onto the plan's weight names.
+
+        Returns ``(weights, qp)``; ``qp`` is the quantized param pytree so
+        callers can run the model-level reference path on identical ints.
+        """
+        from repro.deploy.executor import bind_decoder_weights, bind_encoder_weights
+
+        if self.kind == "decoder":
+            from repro.models import transformer as M
+
+            bind_fn, plan = bind_decoder_weights, self.artifact.prefill
+        else:
+            from repro.models import encoder as M
+
+            bind_fn, plan = bind_encoder_weights, self.artifact
+        if params is None:
+            key = jax.random.PRNGKey(0) if key is None else key
+            params = M.init_params(self.cfg, key)
+        qp = M.quantize_params(self.cfg, params)
+        return bind_fn(plan, self.cfg, qp), qp
+
+    def session(
+        self,
+        batch_size: int,
+        *,
+        params: dict | None = None,
+        key=None,
+        table: DispatchTable | None = None,
+    ) -> "InferenceSession":
+        return InferenceSession(self, batch_size, params=params, key=key, table=table)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "format": _PAYLOAD_FORMAT,
+            "compiler_version": self.compiler_version,
+            "fingerprint": self.fingerprint,
+            "arch": self.cfg.name,
+            "backend": self.backend.value,
+            "options": dict(self.options),
+            "kind": "pair" if self.kind == "decoder" else "plan",
+            "artifact": self.artifact.to_dict(),
+        }
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path: str, cfg: ArchConfig) -> "CompiledModel":
+        """Rehydrate a saved model.  ``cfg`` must be the config it was
+        compiled from (verified against the stored fingerprint), and the
+        artifact must carry the current ``COMPILER_VERSION`` — version
+        bumps mean plan content/semantics may have changed, so executing
+        a stale artifact would silently compute the wrong function."""
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("format") != _PAYLOAD_FORMAT:
+            raise ValueError(f"{path}: not a CompiledModel payload")
+        if payload.get("compiler_version") != COMPILER_VERSION:
+            raise ValueError(
+                f"{path}: compiled by compiler version "
+                f"{payload.get('compiler_version')}, current is "
+                f"{COMPILER_VERSION} — recompile with compile()"
+            )
+        fp = config_fingerprint(cfg, payload["options"])
+        if fp != payload["fingerprint"]:
+            raise ValueError(
+                f"{path}: fingerprint mismatch — saved for config "
+                f"{payload['arch']!r} with different contents/options"
+            )
+        return CompiledModel(
+            cfg=cfg,
+            backend=as_backend(payload["backend"]),
+            artifact=_artifact_from_payload(payload),
+            fingerprint=payload["fingerprint"],
+            compiler_version=int(payload["compiler_version"]),
+            options=dict(payload["options"]),
+            cache_path=path,
+        )
+
+
+# ---------------------------------------------------------------------------
+# compile()
+# ---------------------------------------------------------------------------
+
+def compile(  # noqa: A001 — torch.compile precedent
+    cfg: ArchConfig,
+    *,
+    backend: Backend | str = Backend.W8A8,
+    seq_len: int | None = None,
+    max_len: int | None = None,
+    head_by_head: bool = False,
+    include_head: bool = True,
+    cache_dir: str | None = None,
+    use_cache: bool = True,
+) -> CompiledModel:
+    """Compile one config into its deployment artifact, cached on disk.
+
+    The plan's static engine mapping is solved at the granule of the
+    execution ``backend`` (64 for the ASIC-faithful W8A8 arithmetic, 128
+    for the Pallas/TPU kernels), so the engine column matches what
+    ``DispatchTable.resolve`` does at run time.
+
+    Cache semantics: the key is ``config_fingerprint(cfg, options)`` —
+    the *full* config plus every resolved lowering option (backend
+    granule included).  A hit deserializes the stored plan (bit-exact vs
+    re-lowering; tested); a ``COMPILER_VERSION`` bump or any config /
+    option change misses and recompiles.  ``use_cache=False`` bypasses
+    the disk entirely.  Raises :class:`UnsupportedFamilyError` for
+    families the flow cannot lower yet.
+    """
+    be = as_backend(backend)
+    granule = backend_granule(be)
+    s = seq_len or cfg.max_seq
+    is_decoder = is_dense_decoder(cfg)
+    options = {
+        "backend": be.value,
+        "granule": granule,
+        "seq_len": s,
+        "max_len": (max_len or s + 1) if is_decoder else 0,
+        "head_by_head": head_by_head,
+        "include_head": include_head,
+    }
+    fingerprint = config_fingerprint(cfg, options)
+    cache_dir = cache_dir or default_cache_dir()
+    path = _cache_path(cache_dir, cfg, fingerprint)
+
+    if use_cache:
+        artifact = _cache_load(path, fingerprint)
+        if artifact is not None:
+            return CompiledModel(
+                cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
+                cache_hit=True, cache_path=path,
+            )
+
+    artifact = lower(
+        cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
+        max_len=max_len, granule=granule,
+    )
+    model = CompiledModel(
+        cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
+        cache_path=path if use_cache else None,
+    )
+    if use_cache:
+        _cache_store(path, model.to_dict())
+    return model
+
+
+# ---------------------------------------------------------------------------
+# InferenceSession
+# ---------------------------------------------------------------------------
+
+class InferenceSession:
+    """Stateful runtime surface over one compiled artifact.
+
+    Encoder: :meth:`forward`.  Decoder: :meth:`prefill` /
+    :meth:`prefill_slot` fill the statically planned, batched KV region;
+    :meth:`decode` advances **all** ``batch_size`` request slots by one
+    token in a single plan dispatch, each slot at its *own* generation
+    depth (``pos`` is a per-request vector) — continuous batching from a
+    single static plan.  Slot isolation is exact: every runner is
+    row-local, so slot ``b`` computes the same ints as an independent
+    single-request trajectory at depth ``pos[b]`` (tested bit-exactly on
+    both backends).
+    """
+
+    def __init__(
+        self,
+        model: CompiledModel,
+        batch_size: int,
+        *,
+        params: dict | None = None,
+        key=None,
+        table: DispatchTable | None = None,
+    ):
+        from repro.deploy.executor import execute, execute_decode, execute_prefill
+
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.model = model
+        self.cfg = model.cfg
+        self.backend = model.backend
+        self.batch_size = batch_size
+        self.weights, self.qp = model.bind(params=params, key=key)
+        be, tb = self.backend, table
+        if model.kind == "decoder":
+            pair = model.artifact
+            self._pair = pair
+            self._prefill_fn = jax.jit(
+                lambda w, b: execute_prefill(pair, w, b, backend=be, table=tb)
+            )
+            self._decode_fn = jax.jit(
+                lambda w, c, t, p: execute_decode(pair, w, c, t, pos=p,
+                                                  backend=be, table=tb)
+            )
+            self._kv = None  # {"k": [L,B,Hkv,M,D] int8, "v": ...}
+            self._pos = None  # int32 [B] per-slot generation depth
+        else:
+            plan = model.artifact
+            self._plan = plan
+            self._forward_fn = jax.jit(
+                lambda w, b: execute(plan, w, b, backend=be, table=tb)
+            )
+
+    # -- shared ------------------------------------------------------------
+
+    def _require(self, kind: str, method: str) -> None:
+        if self.model.kind != kind:
+            raise RuntimeError(
+                f"InferenceSession.{method} is a {kind} method; this session "
+                f"wraps a {self.model.kind} artifact ({self.cfg.name})"
+            )
+
+    # -- encoder -----------------------------------------------------------
+
+    def forward(self, x):
+        """One batched forward pass of the encoder plan.
+
+        ``x`` is the plan's input array (``tokens`` int32 [B, S] or int8
+        features [B, S, D]) or a ready batch dict keyed by input name.
+        """
+        self._require("encoder", "forward")
+        batch = x if isinstance(x, dict) else {self._plan.inputs[0]: jnp.asarray(x)}
+        lead = batch[self._plan.inputs[0]].shape[0]
+        if lead != self.batch_size:
+            raise ValueError(
+                f"batch dim {lead} != session batch_size {self.batch_size}"
+            )
+        return self._forward_fn(self.weights, batch)
+
+    # -- decoder -----------------------------------------------------------
+
+    @property
+    def seq_len(self) -> int:
+        """Prompt length the prefill schedule was lowered for."""
+        self._require("decoder", "seq_len")
+        return self._pair.seq_len
+
+    @property
+    def max_len(self) -> int:
+        self._require("decoder", "max_len")
+        return self._pair.max_len
+
+    @property
+    def pos(self):
+        """Per-slot generation depth, int32 [batch_size]."""
+        self._require("decoder", "pos")
+        return self._pos
+
+    @property
+    def kv_cache(self) -> dict | None:
+        """The batched KV region: ``{"k": [L,B,Hkv,max_len,D], "v": ...}``."""
+        self._require("decoder", "kv_cache")
+        return self._kv
+
+    def _check_tokens(self, tokens, rows: int):
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        if tokens.shape != (rows, self._pair.seq_len):
+            raise ValueError(
+                f"prefill tokens must be [{rows}, {self._pair.seq_len}] "
+                f"(the lowered prompt length), got {tuple(tokens.shape)}"
+            )
+        return tokens
+
+    def prefill(self, tokens):
+        """Prefill every slot with one prompt each: tokens int32 [B, S].
+
+        Returns the last-token logits [B, 1, vocab_padded] and resets all
+        slots to depth ``S``.
+        """
+        self._require("decoder", "prefill")
+        tokens = self._check_tokens(tokens, self.batch_size)
+        logits, cache = self._prefill_fn(self.weights, {"tokens": tokens})
+        self._kv = {"k": cache["k"], "v": cache["v"]}
+        self._pos = jnp.full((self.batch_size,), self._pair.seq_len, jnp.int32)
+        return logits
+
+    def prefill_slot(self, slot: int, tokens):
+        """Admit a new request into one slot (continuous batching).
+
+        Runs the prefill schedule at batch 1 and installs the resulting
+        KV rows + depth into slot ``slot``; the other slots' cache rows
+        and positions are untouched, so they keep decoding mid-flight.
+        Returns the new request's last-token logits [1, 1, vocab_padded].
+        """
+        self._require("decoder", "prefill_slot")
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        tokens = self._check_tokens(tokens, 1)
+        logits, cache = self._prefill_fn(self.weights, {"tokens": tokens})
+        if self._kv is None:
+            l, _, hkv, m, d = cache["k"].shape
+            zeros = jnp.zeros((l, self.batch_size, hkv, m, d), cache["k"].dtype)
+            self._kv = {"k": zeros, "v": zeros}
+            self._pos = jnp.zeros((self.batch_size,), jnp.int32)
+        self._kv = {
+            "k": self._kv["k"].at[:, slot].set(cache["k"][:, 0]),
+            "v": self._kv["v"].at[:, slot].set(cache["v"][:, 0]),
+        }
+        self._pos = self._pos.at[slot].set(self._pair.seq_len)
+        return logits
+
+    def decode(self, tokens, pos=None):
+        """One batched continuous-decode dispatch.
+
+        ``tokens`` int32 [B] or [B, 1] — the next token of each request.
+        ``pos`` int32 [B] — each request's current depth (defaults to the
+        session's tracked per-slot positions).  Slot ``b`` RoPE-rotates
+        by ``pos[b]``, appends its K/V at cache row ``pos[b]`` and
+        attends rows ``[0, pos[b]]`` — one dispatch, B depths.  Returns
+        logits [B, 1, vocab_padded]; positions advance to ``pos + 1``.
+        """
+        self._require("decoder", "decode")
+        if self._kv is None:
+            raise RuntimeError("decode before prefill: no KV state in the session")
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        if tokens.shape != (self.batch_size, 1):
+            raise ValueError(
+                f"decode tokens must be [{self.batch_size}, 1], got "
+                f"{tuple(tokens.shape)}"
+            )
+        pos = self._pos if pos is None else jnp.asarray(pos, jnp.int32)
+        if pos.shape != (self.batch_size,):
+            raise ValueError(
+                f"pos must be a per-request vector [{self.batch_size}], got "
+                f"{tuple(pos.shape)}"
+            )
+        # pos is a concrete host-side array here (jit boundary is below):
+        # past-capacity writes would silently clamp inside
+        # dynamic_update_slice and corrupt the deepest cache row, so bound
+        # them loudly instead.
+        if int(jnp.max(pos)) >= self._pair.max_len:
+            full = [b for b in range(self.batch_size)
+                    if int(pos[b]) >= self._pair.max_len]
+            raise ValueError(
+                f"KV region full: slot(s) {full} at pos "
+                f"{[int(pos[b]) for b in full]} >= max_len {self._pair.max_len}; "
+                f"re-admit via prefill_slot or compile with a larger max_len"
+            )
+        logits, cache = self._decode_fn(self.weights, self._kv, tokens, pos)
+        self._kv = {"k": cache["k"], "v": cache["v"]}
+        self._pos = pos + 1
+        return logits

@@ -17,6 +17,7 @@ model's fused QKV GEMM exactly; the per-head schedule reproduces the
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Callable
 
 import jax
@@ -28,6 +29,7 @@ from repro.core.heterogeneous import (
     Backend,
     DispatchTable,
     OpDesc,
+    as_backend,
     backend_granule,
 )
 from repro.core.quant_linear import ACT_GELU, ACT_IDENTITY, ACT_RELU
@@ -238,7 +240,7 @@ def execute(
     weights: dict,
     batch: dict,
     *,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
     table: DispatchTable | None = None,
 ):
     """Run one forward pass of the plan (trace-compatible: jit freely).
@@ -247,6 +249,7 @@ def execute(
     ``frames``) to arrays with a leading batch dim; every runner
     broadcasts over that dim exactly like the model path.
     """
+    backend = as_backend(backend)
     table = DEFAULT_TABLE if table is None else table
     env = dict(weights)
     for name in plan.inputs:
@@ -258,13 +261,26 @@ def execute(
     return outs[0] if len(outs) == 1 else tuple(outs)
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.deploy.executor.{old} is deprecated; use {new} "
+        "(repro.deploy.api) — the unified compile() -> CompiledModel -> "
+        "InferenceSession surface. Kept as a shim for one release.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def make_jit_executor(
     plan: DeploymentPlan,
     *,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
     table: DispatchTable | None = None,
 ):
-    """jit-compiled closure over the (static) plan: fn(weights, batch)."""
+    """Deprecated shim — jit-compiled closure fn(weights, batch) over the
+    static plan.  Use ``compile(cfg).session(batch_size).forward`` instead."""
+    _deprecated("make_jit_executor", "CompiledModel.session().forward")
+    backend = as_backend(backend)
 
     def fn(weights, batch):
         return execute(plan, weights, batch, backend=backend, table=table)
@@ -349,28 +365,21 @@ def plan_and_bind(
     params: dict | None = None,
     head_by_head: bool = False,
     include_head: bool = True,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
 ):
-    """Convenience: float init -> PTQ quantize -> lower -> bind.
-
-    The plan's static engine mapping is solved at the granule of the
-    execution ``backend`` (64 for the ASIC-faithful W8A8 arithmetic, 128
-    for the Pallas/TPU kernels), so the plan's engine column matches what
-    ``DispatchTable.resolve`` will actually do at run time.
+    """Deprecated shim over :func:`repro.deploy.api.compile`.
 
     Returns ``(plan, weights, qp)`` so callers can also run the reference
-    ``forward_w8a8`` on the identical quantized params.
+    ``forward_w8a8`` on the identical quantized params.  New code:
+    ``compile(cfg, backend=...).session(batch_size, params=...)``.
     """
-    from repro.deploy.lowering import lower
-    from repro.models import encoder as EN
+    _deprecated("plan_and_bind", "compile()")
+    from repro.deploy.api import compile as api_compile
 
-    if params is None:
-        key = jax.random.PRNGKey(0) if key is None else key
-        params = EN.init_params(cfg, key)
-    qp = EN.quantize_params(cfg, params)
-    plan = lower(cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
-                 granule=backend_granule(backend))
-    return plan, bind_encoder_weights(plan, cfg, qp), qp
+    m = api_compile(cfg, backend=backend, seq_len=seq_len, head_by_head=head_by_head,
+                    include_head=include_head, use_cache=False)
+    weights, qp = m.bind(params=params, key=key)
+    return m.artifact, weights, qp
 
 
 # ---------------------------------------------------------------------------
@@ -410,24 +419,22 @@ def plan_and_bind_decoder(
     max_len: int | None = None,
     key=None,
     params: dict | None = None,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
 ):
-    """Decoder convenience: float init -> PTQ -> lower pair -> bind.
+    """Deprecated shim over :func:`repro.deploy.api.compile` (decoder).
 
     Returns ``(pair, weights, qp)``; ``qp`` lets callers run the
     reference ``prefill_w8a8`` / ``decode_step_w8a8`` chain on the
-    identical quantized params.
+    identical quantized params.  New code: ``compile(cfg, backend=...,
+    max_len=...).session(batch_size, params=...)``.
     """
-    from repro.deploy.lowering import lower_decoder
-    from repro.models import transformer as T
+    _deprecated("plan_and_bind_decoder", "compile()")
+    from repro.deploy.api import compile as api_compile
 
-    if params is None:
-        key = jax.random.PRNGKey(0) if key is None else key
-        params = T.init_params(cfg, key)
-    qp = T.quantize_params(cfg, params)
-    pair = lower_decoder(cfg, seq_len, max_len=max_len,
-                         granule=backend_granule(backend))
-    return pair, bind_decoder_weights(pair.prefill, cfg, qp), qp
+    m = api_compile(cfg, backend=backend, seq_len=seq_len, max_len=max_len,
+                    use_cache=False)
+    weights, qp = m.bind(params=params, key=key)
+    return m.artifact, weights, qp
 
 
 def _stack_cache(plan: DeploymentPlan, outs_by_name: dict, length) -> dict:
@@ -444,7 +451,7 @@ def execute_prefill(
     weights: dict,
     batch: dict,
     *,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
     table: DispatchTable | None = None,
 ):
     """Run the prefill schedule. Returns ``(logits, cache)`` with the same
@@ -461,31 +468,47 @@ def execute_decode(
     cache: dict,
     token,
     *,
-    backend: Backend = Backend.W8A8,
+    pos=None,
+    backend: Backend | str = Backend.W8A8,
     table: DispatchTable | None = None,
 ):
-    """Advance one token through the decode schedule against ``cache``."""
+    """Advance one token per request through the decode schedule.
+
+    ``pos`` is the generation depth fed to RoPE, the cache append and the
+    attention mask: a scalar (every request at the same depth — the
+    classic chained-decode loop, default ``cache["len"]``) or a **[B]
+    per-request vector** (continuous batching: one dispatch advances a
+    batch of requests at distinct depths, each against its own rows of
+    the statically planned KV region).
+    """
     plan = pair.decode
-    batch = {"token": token, "pos": cache["len"]}
+    if pos is None:
+        pos = cache["len"]
+    batch = {"token": token, "pos": pos}
     for i, (cin, _) in enumerate(plan.kv_state):
         batch[cin] = cache["k" if i % 2 == 0 else "v"][i // 2]
     outs = execute(plan, weights, batch, backend=backend, table=table)
     outs_by_name = dict(zip(plan.outputs, outs))
-    cache_out = _stack_cache(plan, outs_by_name, cache["len"] + 1)
+    cache_out = _stack_cache(plan, outs_by_name, pos + 1)
     return outs_by_name[plan.outputs[0]], cache_out
 
 
 def make_decoder_executors(
     pair: DecoderPlanPair,
     *,
-    backend: Backend = Backend.W8A8,
+    backend: Backend | str = Backend.W8A8,
     table: DispatchTable | None = None,
 ):
-    """jit-compiled ``(prefill_fn, decode_fn)`` closures over the pair:
+    """Deprecated shim — jit-compiled ``(prefill_fn, decode_fn)`` closures:
 
       prefill_fn(weights, batch) -> (logits, cache)
       decode_fn(weights, cache, token) -> (logits, cache)
+
+    Use ``compile(cfg).session(batch_size)`` (prefill/decode with
+    per-request ``pos``) instead.
     """
+    _deprecated("make_decoder_executors", "CompiledModel.session()")
+    backend = as_backend(backend)
     prefill_fn = jax.jit(
         lambda w, b: execute_prefill(pair, w, b, backend=backend, table=table)
     )

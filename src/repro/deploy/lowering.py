@@ -44,6 +44,39 @@ _DEF_S_ACT = 0.05
 _DEF_S_RES = 0.08
 _DEF_S_W = 0.01
 
+#: families ``lower()`` can compile today (ROADMAP queues the rest)
+SUPPORTED_FAMILIES = ("encoder", "dense")
+
+
+def is_dense_decoder(cfg: ArchConfig) -> bool:
+    """Does this config lower to a :class:`DecoderPlanPair`?  The ONE
+    definition of the dense-decoder rule — ``lower()``, ``api.compile``
+    and the launch scripts all branch on this predicate."""
+    return cfg.family == "dense" and not cfg.n_experts
+
+
+class UnsupportedFamilyError(NotImplementedError):
+    """Raised by :func:`lower` for model families the deploy flow cannot
+    compile yet (moe / vlm / encdec / ssm / hybrid …).
+
+    One exception type for every unsupported family — callers branch on
+    the class, not on family-specific ad-hoc failures — and the message
+    always names the offending family.  Subclasses ``NotImplementedError``
+    so pre-existing callers keep working.
+    """
+
+    def __init__(self, cfg: ArchConfig, detail: str = ""):
+        self.family = cfg.family
+        self.arch = cfg.name
+        msg = (
+            f"plan lowering does not support family {cfg.family!r} "
+            f"(config {cfg.name!r}); supported families: "
+            f"{', '.join(SUPPORTED_FAMILIES)} (dense decoders without experts)"
+        )
+        if detail:
+            msg += f" — {detail}"
+        super().__init__(msg)
+
 
 def build_runtime_encoder_graph(
     cfg: ArchConfig,
@@ -475,7 +508,7 @@ def lower(
     schedules linked through a shared static KV-cache region
     (``max_len`` tokens of capacity).
     """
-    if cfg.family == "dense" and not cfg.n_experts:
+    if is_dense_decoder(cfg):
         if head_by_head or not include_head:
             raise NotImplementedError(
                 "head_by_head/include_head are encoder-only options; the "
@@ -486,10 +519,10 @@ def lower(
             s_act=s_act, s_res=s_res, s_w=s_w,
         )
     if cfg.family != "encoder":
-        raise NotImplementedError(
-            "plan lowering covers the encoder family and dense decoders; "
-            f"got {cfg.family}"
-        )
+        detail = ""
+        if cfg.family == "dense":  # dense shell around an expert MLP
+            detail = f"dense config with n_experts={cfg.n_experts} routes as MoE"
+        raise UnsupportedFamilyError(cfg, detail)
     g = build_runtime_encoder_graph(
         cfg, seq_len, s_act=s_act, s_res=s_res, s_w=s_w, include_head=include_head
     )

@@ -1,0 +1,60 @@
+"""Shared CLI plumbing for the plan-backed launch scripts.
+
+One place defines the ``--via-plan`` / ``--backend`` / plan-cache
+argument block and validates backend names, so ``serve.py``,
+``dryrun.py`` and the benchmarks cannot drift apart.  Backend choices
+are derived from the runtime dispatch registry: a name is valid iff
+:func:`repro.core.heterogeneous.as_backend` resolves it to a backend the
+plan executor dispatches (``FLOAT`` is model-path only — plans carry
+integer quant scales).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.heterogeneous import Backend, as_backend
+
+
+def plan_backend_names() -> tuple[str, ...]:
+    """Backend names the plan executor accepts, in enum order."""
+    return tuple(b.value for b in Backend if b is not Backend.FLOAT)
+
+
+def parse_backend(name: str) -> Backend:
+    """Validate + normalize a CLI backend name (argparse ``type=``)."""
+    try:
+        be = as_backend(name)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    if be is Backend.FLOAT:
+        raise argparse.ArgumentTypeError(
+            f"backend {name!r} is model-path only; plan backends: "
+            f"{', '.join(plan_backend_names())}"
+        )
+    return be
+
+
+def add_plan_args(ap: argparse.ArgumentParser, *, via_plan_help: str) -> None:
+    """Install the shared plan-execution argument block.
+
+    ``--backend`` parses straight to a :class:`Backend` enum member
+    (``args.backend.value`` prints the name); ``--plan-cache`` /
+    ``--no-plan-cache`` control the ``compile()`` on-disk plan cache.
+    """
+    ap.add_argument("--via-plan", action="store_true", help=via_plan_help)
+    ap.add_argument(
+        "--backend", type=parse_backend, default=Backend.W8A8,
+        metavar="|".join(plan_backend_names()),
+        help="plan-executor backend: paper-faithful XLA integer path (w8a8) "
+             "or Pallas kernels (ita; interpret on CPU, compiled on TPU)",
+    )
+    ap.add_argument(
+        "--plan-cache", default=None, metavar="DIR",
+        help="plan cache directory for compile() (default: $REPRO_PLAN_CACHE "
+             "or ~/.cache/repro/plans)",
+    )
+    ap.add_argument(
+        "--no-plan-cache", action="store_true",
+        help="bypass the on-disk plan cache (always re-lower)",
+    )

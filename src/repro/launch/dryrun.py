@@ -20,12 +20,14 @@ Outputs one JSON per cell under experiments/dryrun/.
 Plan-backed model path (the paper's deployment flow, executable):
   PYTHONPATH=src python -m repro.launch.dryrun --arch mobilebert --reduced --via-plan
   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --reduced --via-plan
-lowers the config through the deploy pass pipeline into its deployment
-artifact — an encoder DeploymentPlan, or a decoder prefill/decode plan
-pair sharing a static KV region — executes it through the plan executor
-(dispatch via the runtime DispatchTable), and checks bit-exactness
-against the model-level ``forward_w8a8`` (encoder) or ``prefill_w8a8`` +
-chained ``decode_step_w8a8`` (decoder) on the identical quantized params.
+compiles the config through the unified API (``repro.deploy.api.compile``
+with its on-disk plan cache -> ``CompiledModel.session``) into its
+deployment artifact — an encoder DeploymentPlan, or a decoder
+prefill/decode plan pair sharing a static KV region — executes it
+through the InferenceSession (dispatch via the runtime DispatchTable),
+and checks bit-exactness against the model-level ``forward_w8a8``
+(encoder) or ``prefill_w8a8`` + chained ``decode_step_w8a8`` (decoder)
+on the identical quantized params.
 """
 
 import argparse
@@ -163,70 +165,62 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str) -> di
 
 
 def run_decoder_via_plan(
-    arch: str,
+    model,
     *,
-    reduced_cfg: bool,
-    backend: str,
     batch_size: int,
-    seq_len: int | None,
     gen_steps: int,
     out_dir: str,
 ) -> int:
-    """Compile -> linked plan pair -> prefill + chained decode; verify the
-    whole trajectory bit-exactly vs prefill_w8a8 / decode_step_w8a8."""
+    """CompiledModel -> InferenceSession -> prefill + batched continuous
+    decode; verify the whole trajectory bit-exactly vs prefill_w8a8 /
+    decode_step_w8a8 (the session's per-request ``pos`` path)."""
     import numpy as np
 
-    from repro.configs import reduced
-    from repro.core.heterogeneous import Backend
-    from repro.deploy.executor import make_decoder_executors, plan_and_bind_decoder
     from repro.models import transformer as T
 
-    cfg = get_config(arch)
-    if reduced_cfg:
-        cfg = reduced(cfg)
-    be = Backend.ITA if backend == "ita" else Backend.W8A8
-    s = seq_len or 32
-    max_len = s + gen_steps + 1
-
-    t0 = time.time()
-    pair, weights, qp = plan_and_bind_decoder(cfg, s, max_len=max_len, backend=be)
-    t_lower = time.time() - t0
+    cfg, pair = model.cfg, model.artifact
+    arch, max_len = cfg.name, model.artifact.max_len
+    s = pair.seq_len
     counts = pair.counts()
     print(
         f"[plan   ] {arch}: prefill {counts['prefill']['nodes']} nodes "
         f"({counts['prefill']['ita']} ita), decode {counts['decode']['nodes']} "
         f"nodes ({counts['decode']['ita']} ita), KV region "
         f"{len(pair.kv_tensors)} tensors x {max_len} tokens, "
-        f"lowered in {t_lower:.2f}s"
+        f"plan cache {'hit' if model.cache_hit else 'miss'}"
     )
 
-    prefill_fn, decode_fn = make_decoder_executors(pair, backend=be)
+    session = model.session(batch_size)
+    qp = session.qp
     key = jax.random.PRNGKey(0)
-    batch = {"tokens": jax.random.randint(key, (batch_size, s), 0, cfg.vocab, jnp.int32)}
+    tokens = jax.random.randint(key, (batch_size, s), 0, cfg.vocab, jnp.int32)
+
+    def same_state(ref_cache):
+        kv = session.kv_cache
+        return bool(
+            np.array_equal(np.asarray(kv["k"]), np.asarray(ref_cache["k"]))
+            and np.array_equal(np.asarray(kv["v"]), np.asarray(ref_cache["v"]))
+        )
 
     t0 = time.time()
-    logits, cache = prefill_fn(weights, batch)
+    logits = session.prefill(tokens)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
-    ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, batch, max_len)
-    exact = bool(
-        np.array_equal(np.asarray(logits), np.asarray(ref_logits))
-        and np.array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
-        and np.array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
-    )
+    ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, {"tokens": tokens}, max_len)
+    exact = bool(np.array_equal(np.asarray(logits), np.asarray(ref_logits)))
+    exact = exact and same_state(ref_cache)
     tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
     t0 = time.time()
     for _ in range(gen_steps):
-        logits, cache = decode_fn(weights, cache, tok)
+        logits = session.decode(tok)
         ref_logits, ref_cache = T.decode_step_w8a8(cfg, qp, ref_cache, tok)
         exact = exact and bool(
             np.array_equal(np.asarray(logits), np.asarray(ref_logits))
-            and np.array_equal(np.asarray(cache["k"]), np.asarray(ref_cache["k"]))
-            and np.array_equal(np.asarray(cache["v"]), np.asarray(ref_cache["v"]))
-        )
+        ) and same_state(ref_cache)
         tok = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
     t_decode = time.time() - t0
 
+    be = model.backend
     status = "ok" if exact else "MISMATCH"
     print(
         f"[{status:7s}] decoder plan pair [{be.value}] vs prefill_w8a8 + "
@@ -236,12 +230,14 @@ def run_decoder_via_plan(
     )
     os.makedirs(out_dir, exist_ok=True)
     rec = {
-        "arch": arch, "reduced": reduced_cfg, "backend": be.value,
+        "arch": arch, "backend": be.value,
         "status": "ok" if exact else "mismatch", "bit_exact": exact,
         "plan": counts, "max_len": max_len, "gen_steps": gen_steps,
         "memory_peak": {"prefill": pair.prefill.memory_peak,
                         "decode": pair.decode.memory_peak},
-        "lower_s": round(t_lower, 3),
+        "cache_hit": model.cache_hit,
+        "fingerprint": model.fingerprint,
+        "compiler_version": model.compiler_version,
     }
     with open(os.path.join(out_dir, f"{arch}__via_plan_decoder__{be.value}.json"), "w") as f:
         json.dump(rec, f, indent=1)
@@ -253,65 +249,80 @@ def run_via_plan(
     arch: str,
     *,
     reduced_cfg: bool,
-    backend: str,
+    backend,
     batch_size: int,
     seq_len: int | None,
     head_by_head: bool,
     gen_steps: int,
     out_dir: str,
+    cache_dir: str | None = None,
+    use_cache: bool = True,
 ) -> int:
-    """Compile -> plan -> execute one encoder arch; verify vs forward_w8a8."""
+    """compile() -> CompiledModel -> InferenceSession for one arch; verify
+    bit-exactness vs the model-level w8a8 path (both families)."""
     import numpy as np
 
     from repro.configs import reduced
-    from repro.core.heterogeneous import Backend
-    from repro.deploy.executor import make_jit_executor, plan_and_bind
+    from repro.deploy import api
     from repro.models import encoder as EN
 
     cfg = get_config(arch)
     if reduced_cfg:
         cfg = reduced(cfg)
-    if cfg.family == "dense" and not cfg.n_experts:
-        return run_decoder_via_plan(
-            arch, reduced_cfg=reduced_cfg, backend=backend, batch_size=batch_size,
-            seq_len=seq_len, gen_steps=gen_steps, out_dir=out_dir,
-        )
-    if cfg.family != "encoder":
-        raise SystemExit(
-            f"--via-plan lowers encoder configs and dense decoders; "
-            f"{arch} is {cfg.family}")
-
-    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    is_decoder = api.is_dense_decoder(cfg)
+    if is_decoder and head_by_head:
+        print("[note   ] --head-by-head is encoder-only; decoder pairs always "
+              "emit fused attention (flag ignored)")
     t0 = time.time()
-    plan, weights, qp = plan_and_bind(cfg, seq_len, head_by_head=head_by_head, backend=be)
+    try:
+        model = api.compile(
+            cfg,
+            backend=backend,
+            seq_len=(seq_len or 32) if is_decoder else seq_len,
+            max_len=(seq_len or 32) + gen_steps + 1 if is_decoder else None,
+            head_by_head=head_by_head and not is_decoder,
+            cache_dir=cache_dir,
+            use_cache=use_cache,
+        )
+    except api.UnsupportedFamilyError as e:
+        raise SystemExit(f"--via-plan: {e}")
     t_lower = time.time() - t0
+
+    if model.kind == "decoder":
+        return run_decoder_via_plan(
+            model, batch_size=batch_size, gen_steps=gen_steps, out_dir=out_dir,
+        )
+
+    plan = model.artifact
     counts = plan.counts()
     print(
         f"[plan   ] {arch}: {counts['nodes']} nodes "
         f"({counts['ita']} ita / {counts['cluster']} cluster), "
         f"{len(plan.tilings)} tilings, static peak {plan.memory_peak / 1024:.0f} KiB, "
-        f"lowered in {t_lower:.2f}s"
+        f"{'plan cache hit' if model.cache_hit else 'lowered'} in {t_lower:.2f}s"
     )
 
+    session = model.session(batch_size)
+    qp = session.qp
     key = jax.random.PRNGKey(0)
     name = plan.inputs[0]
     if name == "tokens":
-        batch = {name: jax.random.randint(key, (batch_size, plan.seq_len), 0, cfg.vocab, jnp.int32)}
+        x = jax.random.randint(key, (batch_size, plan.seq_len), 0, cfg.vocab, jnp.int32)
     else:
-        batch = {name: jax.random.randint(
-            key, (batch_size, plan.seq_len, cfg.d_model), -64, 64, jnp.int8)}
+        x = jax.random.randint(
+            key, (batch_size, plan.seq_len, cfg.d_model), -64, 64, jnp.int8)
 
-    fn = make_jit_executor(plan, backend=be)
     t0 = time.time()
-    out = jax.block_until_ready(fn(weights, batch))
+    out = jax.block_until_ready(session.forward(x))
     t_first = time.time() - t0
     t0 = time.time()
-    out = jax.block_until_ready(fn(weights, batch))
+    out = jax.block_until_ready(session.forward(x))
     t_steady = time.time() - t0
 
-    ref = jax.block_until_ready(EN.forward_w8a8(cfg, qp, batch))
+    ref = jax.block_until_ready(EN.forward_w8a8(cfg, qp, {name: x}))
     exact = bool(np.array_equal(np.asarray(out), np.asarray(ref)))
     max_diff = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+    be = model.backend
     status = "ok" if exact else "MISMATCH"
     print(
         f"[{status:7s}] plan-executor [{be.value}] vs forward_w8a8: "
@@ -327,6 +338,9 @@ def run_via_plan(
         "plan": counts, "memory_peak": plan.memory_peak,
         "lower_s": round(t_lower, 3), "steady_s": round(t_steady, 4),
         "head_by_head": head_by_head,
+        "cache_hit": model.cache_hit,
+        "fingerprint": model.fingerprint,
+        "compiler_version": model.compiler_version,
     }
     path = os.path.join(out_dir, f"{arch}__via_plan__{be.value}.json")
     with open(path, "w") as f:
@@ -336,19 +350,19 @@ def run_via_plan(
 
 
 def main(argv=None):
+    from repro.launch.cli import add_plan_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
     ap.add_argument("--out-dir", default="experiments/dryrun")
-    ap.add_argument("--via-plan", action="store_true",
-                    help="lower --arch to a DeploymentPlan and execute it "
-                         "(encoder family), verifying bit-exactness vs w8a8")
+    add_plan_args(ap, via_plan_help="compile --arch to its deployment "
+                  "artifact and execute it, verifying bit-exactness vs the "
+                  "model-level w8a8 path (both families)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced (CPU smoke) variant of --arch")
-    ap.add_argument("--backend", choices=["w8a8", "ita"], default="w8a8",
-                    help="plan-executor backend: XLA integer path or Pallas kernels")
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--gen", type=int, default=2,
@@ -370,6 +384,8 @@ def main(argv=None):
             head_by_head=args.head_by_head,
             gen_steps=args.gen,
             out_dir=args.out_dir,
+            cache_dir=args.plan_cache,
+            use_cache=not args.no_plan_cache,
         )
 
     archs = [args.arch] if args.arch else [a for a in list_archs()[:10]]

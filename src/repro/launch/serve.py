@@ -8,11 +8,13 @@ Runnable directly:
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
       --batch 4 --prompt-len 32 --gen 8
 
-Plan-backed serving: ``--via-plan`` lowers the config to its deployment
-artifact once and serves through the plan executor — the compiled
-artifact is the model.  Encoder family: one forward DeploymentPlan
-(batched inference).  Decoder family: a linked prefill/decode plan pair
-sharing a static KV-cache region (prefill + autoregressive decode loop):
+Plan-backed serving: ``--via-plan`` goes through the unified API —
+``repro.deploy.api.compile`` (on-disk plan cache; hit/miss is printed)
+-> ``CompiledModel.session`` — and the compiled artifact is the model.
+Encoder family: batched ``InferenceSession.forward``.  Decoder family:
+``session.prefill`` + a continuous-decode loop where every generation
+step is ONE plan dispatch advancing all request slots at their
+per-request positions:
   PYTHONPATH=src python -m repro.launch.serve --arch mobilebert --reduced \
       --via-plan --batch 8 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
@@ -41,61 +43,78 @@ def greedy_token(logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
 
 
-def serve_via_plan(cfg, *, batch_size: int, steps: int, backend: str) -> None:
-    """Batched encoder serving through the compiled DeploymentPlan."""
-    from repro.core.heterogeneous import Backend
-    from repro.deploy.executor import make_jit_executor, plan_and_bind
+def compile_for_serving(cfg, args):
+    """One ``compile()`` call for both families (the shared CLI surface)."""
+    from repro.deploy import api
 
-    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    is_decoder = api.is_dense_decoder(cfg)
     t0 = time.time()
-    plan, weights, _ = plan_and_bind(cfg, backend=be)
-    fn = make_jit_executor(plan, backend=be)
+    model = api.compile(
+        cfg,
+        backend=args.backend,
+        seq_len=args.prompt_len if is_decoder else None,
+        max_len=args.prompt_len + args.gen + 1 if is_decoder else None,
+        cache_dir=args.plan_cache,
+        use_cache=not args.no_plan_cache,
+    )
+    t_compile = time.time() - t0
+    print(
+        f"compile [{model.backend.value}] {cfg.name}: {model.kind} artifact, "
+        f"plan cache {'hit' if model.cache_hit else 'miss'} "
+        f"({model.fingerprint[:12]}, v{model.compiler_version}) in {t_compile:.2f}s"
+    )
+    return model
+
+
+def serve_via_plan(model, *, batch_size: int, steps: int) -> None:
+    """Batched encoder serving through ``InferenceSession.forward``."""
+    cfg, plan = model.cfg, model.artifact
+    t0 = time.time()
+    session = model.session(batch_size)
     key = jax.random.PRNGKey(0)
     name = plan.inputs[0]
     s = plan.seq_len
 
     def make_batch(k):
         if name == "tokens":
-            return {name: jax.random.randint(k, (batch_size, s), 0, cfg.vocab, jnp.int32)}
-        return {name: jax.random.randint(k, (batch_size, s, cfg.d_model), -64, 64, jnp.int8)}
+            return jax.random.randint(k, (batch_size, s), 0, cfg.vocab, jnp.int32)
+        return jax.random.randint(k, (batch_size, s, cfg.d_model), -64, 64, jnp.int8)
 
     # synthesize all request batches up front so the timed loop measures
     # the executor, not the input generator
     batches = [make_batch(k) for k in jax.random.split(key, steps + 1)]
-    out = jax.block_until_ready(fn(weights, batches[-1]))
+    out = jax.block_until_ready(session.forward(batches[-1]))
     t_compile = time.time() - t0
     t0 = time.time()
     for batch in batches[:steps]:
-        out = fn(weights, batch)
+        out = session.forward(batch)
     jax.block_until_ready(out)
     t_serve = time.time() - t0
     counts = plan.counts()
     print(
-        f"plan-serving [{be.value}] {cfg.name}: {counts['nodes']} nodes "
+        f"plan-serving [{model.backend.value}] {cfg.name}: {counts['nodes']} nodes "
         f"({counts['ita']} ita / {counts['cluster']} cluster); "
-        f"lower+compile {t_compile:.2f}s; {steps} batches of {batch_size}x{s} in "
+        f"bind+compile {t_compile:.2f}s; {steps} batches of {batch_size}x{s} in "
         f"{t_serve:.3f}s ({steps * batch_size / max(t_serve, 1e-9):.1f} inf/s, "
         f"{steps * batch_size * s / max(t_serve, 1e-9):.0f} tok/s)"
     )
 
 
-def serve_decoder_via_plan(cfg, *, batch_size: int, prompt_len: int, gen: int,
-                           backend: str) -> None:
-    """Prefill + autoregressive decode through the compiled plan pair."""
-    from repro.core.heterogeneous import Backend
-    from repro.deploy.executor import make_decoder_executors, plan_and_bind_decoder
+def serve_decoder_via_plan(model, *, batch_size: int, prompt_len: int, gen: int) -> None:
+    """Prefill + batched continuous decode through ``InferenceSession``.
 
-    be = Backend.ITA if backend == "ita" else Backend.W8A8
+    Every generation step is ONE plan dispatch advancing all request
+    slots at their per-request positions — with staggered admission
+    (``prefill_slot``) the depths genuinely differ mid-flight.
+    """
+    pair = model.artifact
     t0 = time.time()
-    pair, weights, _ = plan_and_bind_decoder(
-        cfg, prompt_len, max_len=prompt_len + gen + 1, backend=be
-    )
-    prefill_fn, decode_fn = make_decoder_executors(pair, backend=be)
+    session = model.session(batch_size)
     key = jax.random.PRNGKey(0)
-    batch = {"tokens": jax.random.randint(
-        key, (batch_size, prompt_len), 0, cfg.vocab, jnp.int32)}
+    tokens = jax.random.randint(
+        key, (batch_size, prompt_len), 0, model.cfg.vocab, jnp.int32)
 
-    logits, cache = prefill_fn(weights, batch)
+    logits = session.prefill(tokens)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
@@ -103,7 +122,7 @@ def serve_decoder_via_plan(cfg, *, batch_size: int, prompt_len: int, gen: int,
     out_tokens = [tok]
     t0 = time.time()
     for _ in range(gen):
-        logits, cache = decode_fn(weights, cache, tok)
+        logits = session.decode(tok)
         tok = greedy_token(logits)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
@@ -111,46 +130,46 @@ def serve_decoder_via_plan(cfg, *, batch_size: int, prompt_len: int, gen: int,
     toks = jnp.concatenate(out_tokens, axis=1)
     counts = pair.counts()
     print(
-        f"plan-serving [{be.value}] {cfg.name}: prefill plan "
+        f"plan-serving [{model.backend.value}] {model.cfg.name}: prefill plan "
         f"{counts['prefill']['nodes']} nodes ({counts['prefill']['ita']} ita), "
         f"decode plan {counts['decode']['nodes']} nodes "
         f"({counts['decode']['ita']} ita); KV region "
         f"{len(pair.kv_tensors)} tensors x {pair.max_len} tokens; "
-        f"lower+prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
+        f"bind+prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
         f"decoded {gen} steps in {t_decode:.3f}s "
-        f"({batch_size * gen / max(t_decode, 1e-9):.1f} tok/s)"
+        f"({batch_size * gen / max(t_decode, 1e-9):.1f} tok/s); "
+        f"final per-slot pos {session.pos.tolist()}"
     )
     print("sample tokens:", toks[0, :8].tolist())
 
 
 def main(argv=None):
+    from repro.deploy.lowering import UnsupportedFamilyError
+    from repro.launch.cli import add_plan_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=8)
-    ap.add_argument("--via-plan", action="store_true",
-                    help="serve through the compiled deployment artifact: encoder "
-                         "DeploymentPlan or decoder prefill/decode plan pair")
-    ap.add_argument("--backend", choices=["w8a8", "ita"], default="w8a8")
+    add_plan_args(ap, via_plan_help="serve through the compiled deployment "
+                  "artifact (compile() -> InferenceSession): encoder plan or "
+                  "decoder prefill/decode plan pair")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     if args.via_plan:
-        if cfg.family == "encoder":
-            return serve_via_plan(cfg, batch_size=args.batch, steps=args.gen,
-                                  backend=args.backend)
-        if cfg.family == "dense" and not cfg.n_experts:
-            return serve_decoder_via_plan(
-                cfg, batch_size=args.batch, prompt_len=args.prompt_len,
-                gen=args.gen, backend=args.backend)
-        raise SystemExit(
-            f"--via-plan serves encoder plans and dense decoder plan pairs; "
-            f"{cfg.name} is {cfg.family} (use the default prefill/decode path)"
-        )
+        try:
+            model = compile_for_serving(cfg, args)
+        except UnsupportedFamilyError as e:
+            raise SystemExit(f"--via-plan: {e} (use the default prefill/decode path)")
+        if model.kind == "encoder":
+            return serve_via_plan(model, batch_size=args.batch, steps=args.gen)
+        return serve_decoder_via_plan(
+            model, batch_size=args.batch, prompt_len=args.prompt_len, gen=args.gen)
     api = build(cfg)
     if api.prefill is None:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode loop (try --via-plan)")
