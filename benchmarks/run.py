@@ -5,6 +5,8 @@
   table1_e2e            paper Table I (E2E networks, Multi-Core vs +ITA)
   comparison_sota       paper §V-C commercial-device comparison
   roofline              §Roofline terms from the dry-run artifacts
+  engine_throughput     request-level serving engine: continuous
+                        batching vs serial on the compiled artifact
 
 Prints ``name,us_per_call,derived``-style CSV per section.
 """
@@ -40,6 +42,12 @@ def main() -> None:
     from benchmarks import roofline
 
     roofline.main()
+
+    _section("engine_throughput (continuous batching vs serial)")
+    from benchmarks import engine_throughput
+
+    engine_throughput.main(["--batch", "2", "--requests", "4",
+                            "--prompt-len", "8", "--gen", "4"])
 
     print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
 

@@ -1,59 +1,63 @@
-"""Serve a small model with batched requests through the int8 engine.
+"""Serve many requests through the continuous-batching engine.
 
-The paper's deployment mode at cluster scale: int8 weights, int8 KV cache,
-fused ITAMax attention; prefill and decode are separate jitted functions.
+The paper's deployment flow ends in one static artifact; this example
+serves it like a traffic endpoint: requests are *submitted* to
+``repro.deploy.engine.Engine`` and the scheduler owns everything below —
+FIFO admission into KV slots, one batched decode dispatch per step with
+per-request positions, eviction + slot recycling, streaming.  No slot
+index or ``pos`` vector appears anywhere in this file.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --batch 4 --gen 16
 """
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ShapeCell, get_config, reduced
-from repro.launch.serve import greedy_token, make_serve_fns
-from repro.models import build, synthesize_batch
+from repro.configs import get_config, reduced
+from repro.deploy import api
+from repro.deploy.engine import Engine
+from repro.launch.cli import (
+    add_engine_args,
+    make_sampling,
+    resolve_requests,
+    synthesize_prompts,
+)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    add_engine_args(ap)  # --batch/--requests/--prompt-len/--gen/--sampling…
     args = ap.parse_args(argv)
+    n = resolve_requests(args)
 
     cfg = reduced(get_config(args.arch))
-    api = build(cfg)
-    key = jax.random.PRNGKey(0)
-    sp = api.init_serve_params(key)
-    max_len = args.prompt_len + args.gen + 1
-    prefill, decode = make_serve_fns(api, max_len)
+    model = api.compile(cfg, seq_len=args.prompt_len,
+                        max_len=args.prompt_len + args.gen + 1)
+    engine = Engine(model, max_batch=args.batch, sampling=make_sampling(args))
+    prompts = synthesize_prompts(cfg.vocab, n=n, prompt_len=args.prompt_len)
 
-    cell = ShapeCell("serve", args.prompt_len, args.batch, "prefill")
-    batch = synthesize_batch(cfg, cell, key)
-    t0 = time.time()
-    logits, cache = prefill(sp, batch)
-    jax.block_until_ready(logits)
-    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.3f}s "
-          f"(int8 KV cache: {cache['k'].dtype}, {tuple(cache['k'].shape)})")
+    # stream request 0's tokens as the scheduler samples them
+    streamed = []
+    handles = [
+        engine.submit(p, max_new_tokens=args.gen,
+                      on_token=streamed.append if i == 0 else None)
+        for i, p in enumerate(prompts)
+    ]
+    print(f"submitted {n} requests onto {args.batch} slots "
+          f"(queue depth {engine.queue_depth})")
 
-    tok = greedy_token(logits)
-    seqs = [tok]
-    t0 = time.time()
-    for _ in range(args.gen):
-        logits, cache = decode(sp, cache, tok)
-        tok = greedy_token(logits)
-        seqs.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    out = jnp.concatenate(seqs, axis=1)
-    print(f"decoded {args.gen} steps x {args.batch} requests in {dt:.3f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s, cache len {int(cache['len'])})")
-    for b in range(min(args.batch, 2)):
-        print(f"  request {b}: {out[b, :10].tolist()}")
+    while not engine.idle:
+        engine.step()
+        if handles[0].done and streamed is not None:
+            print(f"request 0 finished streaming: {streamed[:10]} "
+                  f"({handles[0].finish_reason})")
+            streamed = None  # print once
+
+    stats = engine.stats
+    print(f"engine idle: {stats.summary()}")
+    for h in handles[:2]:
+        print(f"  request {h.rid}: {h.tokens[:10]} ({h.finish_reason})")
+    assert stats.tokens_generated == sum(len(h.tokens) for h in handles)
 
 
 if __name__ == "__main__":

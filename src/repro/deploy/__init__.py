@@ -16,14 +16,18 @@ accelerator engine, XLA fallbacks on the cluster).
 ``api`` is the one inference surface over all of it:
 ``compile(cfg) -> CompiledModel -> InferenceSession`` with an on-disk
 plan cache keyed by (config fingerprint, compiler version) and batched
-continuous decoding (per-request ``pos`` vectors).  The pre-API entry
-points in ``executor`` (``plan_and_bind*``, ``make_*_executor*``) are
-deprecated shims over it, kept for one release.
+continuous decoding (per-request ``pos`` vectors).  ``engine`` is the
+request-level serving layer on top: ``Engine.submit() -> RequestHandle``
+runs a continuous-batching scheduler (FIFO admission, slot eviction +
+recycling, streaming) so no caller touches slot indices; the
+slot-indexed ``InferenceSession`` remains the documented low-level
+surface underneath.
 """
 
 from repro.deploy import (  # noqa: F401
     api,
     costmodel,
+    engine,
     executor,
     graph,
     hlo_analysis,
@@ -37,8 +41,17 @@ from repro.deploy.api import (  # noqa: F401
     COMPILER_VERSION,
     CompiledModel,
     InferenceSession,
+    KVCapacityError,
     UnsupportedFamilyError,
     compile,
     config_fingerprint,
     is_dense_decoder,
+)
+from repro.deploy.engine import (  # noqa: F401
+    Engine,
+    EngineStats,
+    Greedy,
+    RequestHandle,
+    RequestStatus,
+    Temperature,
 )

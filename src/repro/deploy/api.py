@@ -62,6 +62,30 @@ COMPILER_VERSION = 3
 _PAYLOAD_FORMAT = "repro.deploy.api/compiled-model"
 
 
+class KVCapacityError(ValueError):
+    """A decode dispatch would write past the statically planned KV region.
+
+    Carries exactly *which* request slots are out of capacity so a
+    scheduler (:class:`repro.deploy.engine.Engine`) can evict precisely —
+    finish those requests, recycle their slots — and re-dispatch the
+    survivors, instead of tearing down the whole batch.
+
+    Attributes: ``slots`` (tuple of offending slot indices), ``pos``
+    (their per-slot depths, same order), ``max_len`` (the region's
+    planned capacity).
+    """
+
+    def __init__(self, slots, pos, max_len: int):
+        self.slots = tuple(int(s) for s in slots)
+        self.pos = tuple(int(p) for p in pos)
+        self.max_len = int(max_len)
+        super().__init__(
+            f"KV region full: slot(s) {list(self.slots)} at pos "
+            f"{list(self.pos)} >= max_len {self.max_len}; re-admit via "
+            f"prefill_slot or compile with a larger max_len"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Fingerprint + on-disk plan cache
 # ---------------------------------------------------------------------------
@@ -118,15 +142,29 @@ def _cache_load(path: str, fingerprint: str):
 
 
 def _cache_store(path: str, payload: dict) -> None:
+    """Publish one cache entry atomically (multi-process safe).
+
+    Each writer dumps into its own ``mkstemp`` file in the destination
+    directory, fsyncs, then ``os.replace``s it over the final name — so a
+    reader only ever sees no file or one complete JSON document, never a
+    torn entry.  Concurrent writers of the *same* fingerprint race on the
+    replace; whichever lands last wins, which is harmless because the
+    payload is a pure function of (config, options, compiler version) —
+    both candidates carry identical content.
+    """
     os.makedirs(os.path.dirname(path), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())  # a crash can't leave a short file published
         os.replace(tmp, path)  # atomic publish: readers never see partial JSON
     except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        try:
+            os.unlink(tmp)  # tolerate a concurrent cleaner: ENOENT is fine
+        except OSError:
+            pass
         raise
 
 
@@ -496,15 +534,13 @@ class InferenceSession:
         # pos is a concrete host-side array here (jit boundary is below):
         # past-capacity writes would silently clamp inside
         # dynamic_update_slice and corrupt the deepest cache row, so bound
-        # them loudly instead.
+        # them loudly instead — with the offending slots attached, so a
+        # scheduler can evict exactly those and re-dispatch the rest.
         if int(jnp.max(pos)) >= self._pair.max_len:
             full = [b for b in range(self.batch_size)
                     if int(pos[b]) >= self._pair.max_len]
-            raise ValueError(
-                f"KV region full: slot(s) {full} at pos "
-                f"{[int(pos[b]) for b in full]} >= max_len {self._pair.max_len}; "
-                f"re-admit via prefill_slot or compile with a larger max_len"
-            )
+            raise KVCapacityError(full, [int(pos[b]) for b in full],
+                                  self._pair.max_len)
         logits, cache = self._decode_fn(self.weights, self._kv, tokens, pos)
         self._kv = {"k": cache["k"], "v": cache["v"]}
         self._pos = pos + 1

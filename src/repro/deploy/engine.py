@@ -1,0 +1,464 @@
+"""Request-level serving engine: ``Engine.submit() -> RequestHandle``.
+
+The layer above :class:`~repro.deploy.api.InferenceSession`.  The session
+is slot-indexed — callers hand-manage which request lives in which KV
+row and feed per-request ``pos`` vectors by hand.  The engine owns all of
+that: callers ``submit(prompt_tokens, max_new_tokens)`` and get back a
+:class:`RequestHandle`; ``step()`` / ``run_until_idle()`` run the
+continuous-batching scheduler loop on top of the one statically planned
+artifact:
+
+* **FIFO admission** — queued requests enter free (or newly recycled)
+  slots via ``session.prefill_slot`` while resident requests keep
+  decoding mid-flight;
+* **one batched decode dispatch per step** — every resident request
+  advances one token at its own depth (the session's per-request ``pos``
+  vector), so the batch dimension stays as full as the traffic allows
+  (the throughput lever on many-core targets, cf. arXiv 2405.19284);
+* **completion detection** — EOS, ``max_new_tokens``, or KV capacity
+  (via the structured :class:`~repro.deploy.api.KVCapacityError`, which
+  names exactly the slots that ran out — the engine evicts precisely
+  those and re-dispatches the rest);
+* **slot eviction + recycling** — a finished request's slot goes
+  straight back to the admission queue's disposal;
+* **streaming** — an optional per-token callback on each handle fires
+  the moment a token is sampled.
+
+Prompt lengths are *at least* the compiled prompt length ``S`` (the
+prefill schedule is static): the first ``S`` tokens go through
+``prefill_slot``, any remaining prompt tokens are teacher-forced through
+the same batched decode dispatches (status ``PREFILLING``) before
+generation starts (status ``DECODING``) — so mixed prompt lengths share
+one plan.
+
+Everything stays bit-exact vs independent single-request
+``decode_step_w8a8`` trajectories (slot isolation is row-local; tested
+on both backends with staggered submits and evictions in
+``tests/test_engine.py``).
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import enum
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.deploy.api import CompiledModel, InferenceSession, KVCapacityError
+
+
+# ---------------------------------------------------------------------------
+# Sampling policies
+# ---------------------------------------------------------------------------
+
+class Greedy:
+    """Deterministic argmax over the real-vocab slice of the logits row.
+
+    ``vocab`` masks the LM head's padding lanes (zero-weight columns
+    whose logit 0 would beat an all-negative real row and emit an
+    out-of-vocab id); the engine fills it from the model config when
+    left ``None`` — the same binding rule as :class:`Temperature`."""
+
+    name = "greedy"
+
+    def __init__(self, vocab: int | None = None):
+        self.vocab = vocab
+
+    def __call__(self, logits_row, rid: int, index: int) -> int:
+        row = logits_row[: self.vocab] if self.vocab else logits_row
+        return int(jnp.argmax(row))
+
+
+class Temperature:
+    """Temperature sampling with a caller-supplied key.
+
+    The key is folded with the request's submit-order id and the token
+    index — never with the slot the scheduler happened to place the
+    request in — so sampled streams are deterministic across batch
+    orderings, admission order, and ``max_batch``.  ``vocab`` restricts
+    sampling to real tokens (the LM head is padded to a multiple of
+    256); the engine fills it from the model config when left ``None``.
+    """
+
+    name = "temperature"
+
+    def __init__(self, temperature: float, key, vocab: int | None = None):
+        if temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {temperature}")
+        self.temperature = float(temperature)
+        self.key = key
+        self.vocab = vocab
+
+    def __call__(self, logits_row, rid: int, index: int) -> int:
+        k = jax.random.fold_in(jax.random.fold_in(self.key, rid), index)
+        row = logits_row[: self.vocab] if self.vocab else logits_row
+        return int(jax.random.categorical(k, row / self.temperature))
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"          # submitted, waiting for a slot
+    PREFILLING = "prefilling"  # resident; prompt tokens still being consumed
+    DECODING = "decoding"      # resident; generating
+    DONE = "done"              # finished: eos / length / kv_capacity
+    EVICTED = "evicted"        # cancelled; slot (if any) recycled
+
+
+class RequestHandle:
+    """One submitted request: status, generated tokens, streaming hook.
+
+    ``tokens`` grows as the scheduler samples; ``finish_reason`` is one
+    of ``"eos"``, ``"length"`` (hit ``max_new_tokens``),
+    ``"kv_capacity"`` (evicted by the static KV region's capacity, with
+    whatever it generated so far) or ``"cancelled"``.  ``on_token(tok)``
+    fires synchronously the moment each token is sampled (streaming).
+    """
+
+    def __init__(self, engine: "Engine", rid: int, prompt: tuple[int, ...],
+                 max_new_tokens: int, eos_id: int | None,
+                 on_token: Callable[[int], None] | None):
+        self._engine = engine
+        self.rid = rid
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.on_token = on_token
+        self.status = RequestStatus.QUEUED
+        self.tokens: list[int] = []
+        self.finish_reason: str | None = None
+        self.slot: int | None = None  # scheduler-internal residency
+
+    @property
+    def done(self) -> bool:
+        return self.status in (RequestStatus.DONE, RequestStatus.EVICTED)
+
+    def cancel(self) -> None:
+        """Withdraw the request (queued or mid-flight) and free its slot."""
+        self._engine.cancel(self)
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(rid={self.rid}, status={self.status.value}, "
+                f"prompt_len={len(self.prompt)}, generated={len(self.tokens)}, "
+                f"finish_reason={self.finish_reason!r})")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Live scheduler counters (one record per engine, updated in place)."""
+
+    max_batch: int
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    requests_evicted: int = 0      # cancellations
+    slots_recycled: int = 0        # admissions into a previously used slot
+    prefill_dispatches: int = 0
+    decode_dispatches: int = 0
+    tokens_generated: int = 0
+    prompt_tokens_forced: int = 0  # prompt tail consumed through decode
+    slot_steps_busy: int = 0       # sum over dispatches of resident requests
+    queue_depth: int = 0
+    peak_queue_depth: int = 0
+    slots_busy: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing real work per decode dispatch."""
+        return self.slot_steps_busy / max(1, self.decode_dispatches * self.max_batch)
+
+    def tokens_per_s(self) -> float:
+        """Generated tokens over total dispatch time (prefill + decode)."""
+        return self.tokens_generated / max(self.prefill_time_s + self.decode_time_s,
+                                           1e-9)
+
+    def summary(self) -> str:
+        return (
+            f"{self.requests_completed}/{self.requests_submitted} requests done "
+            f"({self.requests_evicted} cancelled), {self.tokens_generated} tokens "
+            f"in {self.decode_dispatches} decode dispatches "
+            f"({self.occupancy():.0%} slot occupancy, "
+            f"{self.slots_recycled} slots recycled, "
+            f"{self.tokens_per_s():.1f} tok/s)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching scheduler over one compiled decoder artifact.
+
+    ``Engine(compiled_model, max_batch)`` builds the underlying
+    ``InferenceSession`` (``max_batch`` request slots against one
+    statically planned KV region); passing an existing decoder
+    ``InferenceSession`` as the first argument adopts it instead.
+    ``sampling`` is a policy callable ``(logits_row, rid, index) -> int``
+    — :class:`Greedy` (default) or :class:`Temperature` with a
+    caller-supplied key.
+    """
+
+    def __init__(
+        self,
+        model: CompiledModel | InferenceSession,
+        max_batch: int | None = None,
+        *,
+        sampling=None,
+        params: dict | None = None,
+        key=None,
+        table=None,
+    ):
+        if isinstance(model, InferenceSession):
+            if max_batch not in (None, model.batch_size):
+                raise ValueError(
+                    f"max_batch {max_batch} != adopted session batch_size "
+                    f"{model.batch_size}")
+            if params is not None or key is not None or table is not None:
+                raise ValueError(
+                    "params/key/table apply when the engine builds its own "
+                    "session; an adopted InferenceSession already carries "
+                    "bound weights and a dispatch table")
+            if model.model.kind == "decoder" and model.pos is not None:
+                raise ValueError(
+                    "adopted session already holds live KV state (prefilled "
+                    "requests); the engine owns slots exclusively and would "
+                    "clobber them — hand it a fresh session")
+            self.session = model
+        else:
+            if max_batch is None or max_batch < 1:
+                raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+            self.session = model.session(max_batch, params=params, key=key,
+                                         table=table)
+        if self.session.model.kind != "decoder":
+            raise ValueError(
+                "Engine serves decoder artifacts (prefill/decode); "
+                f"{self.session.cfg.name} compiled to an encoder plan — "
+                "use InferenceSession.forward for encoders")
+        self.cfg = self.session.cfg
+        self.max_batch = self.session.batch_size
+        self.seq_len = self.session.seq_len
+        self.max_len = self.session.max_len
+        sampling = sampling if sampling is not None else Greedy()
+        if getattr(sampling, "vocab", 0) is None:
+            # bind an engine-local copy: a caller-shared policy must not be
+            # mutated, or a second engine over a different vocab would
+            # inherit (and sample past) the first model's range
+            sampling = copy.copy(sampling)
+            sampling.vocab = self.cfg.vocab
+        self.sampling = sampling
+        self.stats = EngineStats(max_batch=self.max_batch)
+        self._queue: deque[RequestHandle] = deque()
+        self._slots: list[RequestHandle | None] = [None] * self.max_batch
+        # engine-owned per-slot depth; free slots are pinned at 0 so their
+        # placeholder lane in a batched dispatch never trips KV capacity
+        self._pos: list[int] = [0] * self.max_batch
+        self._next_input: list[int] = [0] * self.max_batch
+        self._used_slots: set[int] = set()
+        self._next_rid = 0
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        prompt_tokens: Sequence[int],
+        max_new_tokens: int,
+        *,
+        eos_id: int | None = None,
+        on_token: Callable[[int], None] | None = None,
+    ) -> RequestHandle:
+        """Enqueue one request; the scheduler admits it FIFO on a later
+        :meth:`step`.
+
+        ``prompt_tokens`` must be at least the compiled prompt length
+        (``seq_len``) and at most the KV capacity (``max_len``); tokens
+        past ``seq_len`` are teacher-forced through batched decode.
+        Generation stops at ``eos_id`` (recorded as the final token),
+        after ``max_new_tokens``, or when the KV region fills.
+        """
+        prompt = tuple(int(t) for t in prompt_tokens)
+        if len(prompt) < self.seq_len:
+            raise ValueError(
+                f"prompt has {len(prompt)} tokens but the compiled prefill "
+                f"schedule is static at seq_len={self.seq_len}; pad or "
+                f"recompile with a smaller seq_len")
+        if len(prompt) > self.max_len:
+            raise ValueError(
+                f"prompt has {len(prompt)} tokens but the KV region holds "
+                f"max_len={self.max_len}; recompile with a larger max_len")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        handle = RequestHandle(self, self._next_rid, prompt, int(max_new_tokens),
+                               eos_id, on_token)
+        self._next_rid += 1
+        self._queue.append(handle)
+        self.stats.requests_submitted += 1
+        self._note_queue()
+        return handle
+
+    def cancel(self, handle: RequestHandle) -> None:
+        if handle.done:
+            return
+        if handle.status is RequestStatus.QUEUED:
+            self._queue.remove(handle)
+            self._note_queue()
+        self._finish(handle, "cancelled", status=RequestStatus.EVICTED)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def slots_busy(self) -> int:
+        return sum(1 for h in self._slots if h is not None)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and self.slots_busy == 0
+
+    def reset_stats(self) -> EngineStats:
+        """Zero the counters *and* the slot-reuse bookkeeping — e.g. after
+        a warm-up pass, so a timed trace starts from a clean record."""
+        self._used_slots = {b for b, h in enumerate(self._slots)
+                            if h is not None}
+        self.stats = EngineStats(max_batch=self.max_batch)
+        self._note_queue()
+        return self.stats
+
+    # -- scheduler loop ----------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduler step: admit FIFO into free slots, then advance
+        every resident request by one token in a single batched decode
+        dispatch.  Returns False when the engine is idle."""
+        worked = self._admit()
+        active = [b for b, h in enumerate(self._slots) if h is not None]
+        if not active:
+            self._note_queue()
+            return worked
+
+        # capacity evictions re-dispatch within the same step: the error
+        # names exactly the slots past max_len, so only those requests
+        # finish (reason "kv_capacity") and the survivors still advance.
+        while active:
+            tokens = jnp.asarray(self._next_input, jnp.int32)
+            pos = jnp.asarray(self._pos, jnp.int32)
+            t0 = time.perf_counter()
+            try:
+                logits = self.session.decode(tokens, pos)
+            except KVCapacityError as e:
+                for b in e.slots:
+                    if self._slots[b] is not None:
+                        self._finish(self._slots[b], "kv_capacity")
+                active = [b for b, h in enumerate(self._slots) if h is not None]
+                continue
+            jax.block_until_ready(logits)
+            self.stats.decode_time_s += time.perf_counter() - t0
+            self.stats.decode_dispatches += 1
+            self.stats.slot_steps_busy += len(active)
+            for b in active:
+                if self._slots[b] is None:
+                    continue  # evicted mid-loop by a streaming callback
+                self._pos[b] += 1
+                self._consume_logits(b, logits[b, -1])
+            break
+        self._note_queue()
+        return True
+
+    def run_until_idle(self, max_steps: int | None = None) -> EngineStats:
+        """Drive :meth:`step` until every submitted request is finished."""
+        steps = 0
+        while not self.idle:
+            if not self.step():
+                raise RuntimeError("scheduler made no progress with work pending")
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(
+                    f"engine not idle after {max_steps} steps "
+                    f"(queue={self.queue_depth}, busy={self.slots_busy})")
+        return self.stats
+
+    # -- internals ---------------------------------------------------------
+
+    def _note_queue(self) -> None:
+        self.stats.queue_depth = len(self._queue)
+        self.stats.peak_queue_depth = max(self.stats.peak_queue_depth,
+                                          self.stats.queue_depth)
+        self.stats.slots_busy = self.slots_busy
+
+    def _admit(self) -> bool:
+        """FIFO admission: prefill queued requests into free slots."""
+        admitted = False
+        while self._queue:
+            free = next((b for b, h in enumerate(self._slots) if h is None), None)
+            if free is None:
+                break
+            handle = self._queue.popleft()
+            handle.slot = free
+            handle.status = RequestStatus.PREFILLING
+            self._slots[free] = handle
+            if free in self._used_slots:
+                self.stats.slots_recycled += 1
+            self._used_slots.add(free)
+            head = jnp.asarray(handle.prompt[: self.seq_len], jnp.int32)[None]
+            t0 = time.perf_counter()
+            logits = self.session.prefill_slot(free, head)
+            jax.block_until_ready(logits)
+            self.stats.prefill_time_s += time.perf_counter() - t0
+            self.stats.prefill_dispatches += 1
+            self._pos[free] = self.seq_len
+            self._consume_logits(free, logits[0, -1])
+            admitted = True
+        return admitted
+
+    def _consume_logits(self, b: int, logits_row) -> None:
+        """Turn slot ``b``'s fresh logits (predicting token index
+        ``self._pos[b]``) into its next decode input: the next prompt
+        token while prefilling, a sampled token once generating."""
+        handle = self._slots[b]
+        depth = self._pos[b]
+        if depth < len(handle.prompt):
+            # teacher-force the prompt tail through the batched decode path
+            self._next_input[b] = handle.prompt[depth]
+            self.stats.prompt_tokens_forced += 1
+            return
+        tok = int(self.sampling(logits_row, handle.rid, len(handle.tokens)))
+        handle.status = RequestStatus.DECODING
+        handle.tokens.append(tok)
+        self.stats.tokens_generated += 1
+        if handle.on_token is not None:
+            handle.on_token(tok)
+            if handle.done:  # the callback cancelled this very request
+                return
+        if handle.eos_id is not None and tok == handle.eos_id:
+            self._finish(handle, "eos")
+        elif len(handle.tokens) >= handle.max_new_tokens:
+            self._finish(handle, "length")
+        else:
+            self._next_input[b] = tok
+
+    def _finish(self, handle: RequestHandle, reason: str,
+                status: RequestStatus = RequestStatus.DONE) -> None:
+        if handle.done:  # reentrancy guard: callbacks may cancel mid-consume
+            return
+        handle.finish_reason = reason
+        handle.status = status
+        if handle.slot is not None:
+            b, handle.slot = handle.slot, None
+            self._slots[b] = None
+            self._pos[b] = 0  # park the freed lane where it can never overflow
+            self._next_input[b] = 0
+        if status is RequestStatus.DONE:
+            self.stats.requests_completed += 1
+        else:
+            self.stats.requests_evicted += 1
+        self._note_queue()

@@ -17,7 +17,6 @@ model's fused QKV GEMM exactly; the per-head schedule reproduces the
 from __future__ import annotations
 
 import math
-import warnings
 from typing import Callable
 
 import jax
@@ -261,33 +260,6 @@ def execute(
     return outs[0] if len(outs) == 1 else tuple(outs)
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.deploy.executor.{old} is deprecated; use {new} "
-        "(repro.deploy.api) — the unified compile() -> CompiledModel -> "
-        "InferenceSession surface. Kept as a shim for one release.",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def make_jit_executor(
-    plan: DeploymentPlan,
-    *,
-    backend: Backend | str = Backend.W8A8,
-    table: DispatchTable | None = None,
-):
-    """Deprecated shim — jit-compiled closure fn(weights, batch) over the
-    static plan.  Use ``compile(cfg).session(batch_size).forward`` instead."""
-    _deprecated("make_jit_executor", "CompiledModel.session().forward")
-    backend = as_backend(backend)
-
-    def fn(weights, batch):
-        return execute(plan, weights, batch, backend=backend, table=table)
-
-    return jax.jit(fn)
-
-
 def _weight_binder(weights: dict):
     """(put, put_norm) closures writing non-None params into ``weights``."""
 
@@ -357,31 +329,6 @@ def bind_encoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dic
     return _check_bound(plan, weights)
 
 
-def plan_and_bind(
-    cfg: ArchConfig,
-    seq_len: int | None = None,
-    *,
-    key=None,
-    params: dict | None = None,
-    head_by_head: bool = False,
-    include_head: bool = True,
-    backend: Backend | str = Backend.W8A8,
-):
-    """Deprecated shim over :func:`repro.deploy.api.compile`.
-
-    Returns ``(plan, weights, qp)`` so callers can also run the reference
-    ``forward_w8a8`` on the identical quantized params.  New code:
-    ``compile(cfg, backend=...).session(batch_size, params=...)``.
-    """
-    _deprecated("plan_and_bind", "compile()")
-    from repro.deploy.api import compile as api_compile
-
-    m = api_compile(cfg, backend=backend, seq_len=seq_len, head_by_head=head_by_head,
-                    include_head=include_head, use_cache=False)
-    weights, qp = m.bind(params=params, key=key)
-    return m.artifact, weights, qp
-
-
 # ---------------------------------------------------------------------------
 # Decoder plans: weight binding + KV-cache-threading executors
 # ---------------------------------------------------------------------------
@@ -410,31 +357,6 @@ def bind_decoder_weights(plan: DeploymentPlan, cfg: ArchConfig, qp: dict) -> dic
     if "lm_head" in qp:
         put("lm_head", qp["lm_head"]["w_q"])
     return _check_bound(plan, weights)
-
-
-def plan_and_bind_decoder(
-    cfg: ArchConfig,
-    seq_len: int | None = None,
-    *,
-    max_len: int | None = None,
-    key=None,
-    params: dict | None = None,
-    backend: Backend | str = Backend.W8A8,
-):
-    """Deprecated shim over :func:`repro.deploy.api.compile` (decoder).
-
-    Returns ``(pair, weights, qp)``; ``qp`` lets callers run the
-    reference ``prefill_w8a8`` / ``decode_step_w8a8`` chain on the
-    identical quantized params.  New code: ``compile(cfg, backend=...,
-    max_len=...).session(batch_size, params=...)``.
-    """
-    _deprecated("plan_and_bind_decoder", "compile()")
-    from repro.deploy.api import compile as api_compile
-
-    m = api_compile(cfg, backend=backend, seq_len=seq_len, max_len=max_len,
-                    use_cache=False)
-    weights, qp = m.bind(params=params, key=key)
-    return m.artifact, weights, qp
 
 
 def _stack_cache(plan: DeploymentPlan, outs_by_name: dict, length) -> dict:
@@ -491,28 +413,3 @@ def execute_decode(
     outs_by_name = dict(zip(plan.outputs, outs))
     cache_out = _stack_cache(plan, outs_by_name, pos + 1)
     return outs_by_name[plan.outputs[0]], cache_out
-
-
-def make_decoder_executors(
-    pair: DecoderPlanPair,
-    *,
-    backend: Backend | str = Backend.W8A8,
-    table: DispatchTable | None = None,
-):
-    """Deprecated shim — jit-compiled ``(prefill_fn, decode_fn)`` closures:
-
-      prefill_fn(weights, batch) -> (logits, cache)
-      decode_fn(weights, cache, token) -> (logits, cache)
-
-    Use ``compile(cfg).session(batch_size)`` (prefill/decode with
-    per-request ``pos``) instead.
-    """
-    _deprecated("make_decoder_executors", "CompiledModel.session()")
-    backend = as_backend(backend)
-    prefill_fn = jax.jit(
-        lambda w, b: execute_prefill(pair, w, b, backend=backend, table=table)
-    )
-    decode_fn = jax.jit(
-        lambda w, c, t: execute_decode(pair, w, c, t, backend=backend, table=table)
-    )
-    return prefill_fn, decode_fn

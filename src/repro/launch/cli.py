@@ -7,6 +7,11 @@ are derived from the runtime dispatch registry: a name is valid iff
 :func:`repro.core.heterogeneous.as_backend` resolves it to a backend the
 plan executor dispatches (``FLOAT`` is model-path only — plans carry
 integer quant scales).
+
+``add_engine_args`` / ``make_sampling`` are the matching shared block
+for the request-level serving engine (``repro.deploy.engine.Engine``):
+request count, generation budget and the sampling policy — so the serve
+CLI and the throughput benchmark present one surface.
 """
 
 from __future__ import annotations
@@ -58,3 +63,65 @@ def add_plan_args(ap: argparse.ArgumentParser, *, via_plan_help: str) -> None:
         "--no-plan-cache", action="store_true",
         help="bypass the on-disk plan cache (always re-lower)",
     )
+
+
+def add_engine_args(ap: argparse.ArgumentParser) -> None:
+    """Install the shared serving-engine argument block.
+
+    ``--batch`` is the engine's ``max_batch`` (KV-region slots);
+    ``--requests`` how many to submit (default: a multiple of the batch
+    via :func:`resolve_requests`, so the scheduler genuinely evicts and
+    recycles slots); ``--sampling`` / ``--temperature`` /
+    ``--sample-seed`` pick the token policy.
+    """
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine max_batch: concurrent request slots")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests to submit (default: a multiple of --batch "
+                         "— see each tool's resolve_requests factor — so "
+                         "slot eviction + recycling genuinely happen)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=8,
+                    help="max_new_tokens per request")
+    ap.add_argument("--sampling", choices=("greedy", "temperature"),
+                    default="greedy")
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="PRNG seed for --sampling temperature")
+
+
+def make_sampling(args):
+    """Build the engine sampling policy from the shared argument block."""
+    from repro.deploy.engine import Greedy, Temperature
+
+    if args.sampling == "temperature":
+        import jax
+
+        return Temperature(args.temperature, jax.random.PRNGKey(args.sample_seed))
+    return Greedy()
+
+
+def resolve_requests(args, *, factor: int = 2) -> int:
+    """The ``--requests`` default: ``factor * batch`` keeps admissions
+    outrunning the slot count so eviction + recycling genuinely happen
+    (serve/example use 2x; the throughput benchmark asks for 3x)."""
+    return args.requests if args.requests is not None else factor * args.batch
+
+
+def synthesize_prompts(vocab: int, *, n: int, prompt_len: int, extra: int = 0,
+                       seed: int = 0) -> list[list[int]]:
+    """``n`` random prompts with lengths staggered across
+    ``[prompt_len, prompt_len + extra]`` — the tail past the static
+    prefill length is teacher-forced through batched decode, so resident
+    requests sit at genuinely mixed depths.  One implementation so the
+    serve CLI, the example and the throughput benchmark drive the engine
+    with the same traffic shape."""
+    import jax
+
+    key = jax.random.PRNGKey(seed)
+    prompts = []
+    for i in range(n):
+        p = prompt_len + (i % (extra + 1))
+        toks = jax.random.randint(jax.random.fold_in(key, i), (p,), 0, vocab)
+        prompts.append([int(t) for t in toks])
+    return prompts

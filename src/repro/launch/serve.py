@@ -1,24 +1,21 @@
-"""Serving driver: int8 prefill + batched decode (the paper's E2E mode).
+"""Serving driver: the request-level engine over the compiled artifact.
 
-Continuous decode over a fixed batch of requests; prefill and decode are
-separate jitted functions (the production pattern — decode_32k cells lower
-``serve_step`` = one decode step).
+Everything serves from the deployment artifact (``repro.deploy.compile``
+— the on-disk plan cache prints hit/miss).  Decoder families go through
+the continuous-batching scheduler (``repro.deploy.engine.Engine``):
+requests are *submitted*, the engine owns slot admission, the per-request
+``pos`` vector, eviction and recycling — no caller here touches a slot
+index.  Encoder families run batched ``InferenceSession.forward``.
 
 Runnable directly:
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
-      --batch 4 --prompt-len 32 --gen 8
-
-Plan-backed serving: ``--via-plan`` goes through the unified API —
-``repro.deploy.api.compile`` (on-disk plan cache; hit/miss is printed)
--> ``CompiledModel.session`` — and the compiled artifact is the model.
-Encoder family: batched ``InferenceSession.forward``.  Decoder family:
-``session.prefill`` + a continuous-decode loop where every generation
-step is ONE plan dispatch advancing all request slots at their
-per-request positions:
+      --batch 4 --requests 8 --prompt-len 32 --gen 8
   PYTHONPATH=src python -m repro.launch.serve --arch mobilebert --reduced \
-      --via-plan --batch 8 --gen 16
-  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
-      --via-plan --batch 4 --prompt-len 32 --gen 8
+      --batch 8 --gen 16
+
+``--via-plan`` is accepted for compatibility with the shared CLI block
+(serving has been plan-backed since the unified API; the flag is now
+implied).
 """
 
 from __future__ import annotations
@@ -29,21 +26,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ShapeCell, get_config, reduced
-from repro.models import build, synthesize_batch
+from repro.configs import get_config, reduced
 
 
-def make_serve_fns(api, max_len: int):
-    prefill = jax.jit(lambda sp, batch: api.prefill(sp, batch, max_len))
-    decode = jax.jit(lambda sp, cache, tok: api.decode_step(sp, cache, tok))
-    return prefill, decode
-
-
-def greedy_token(logits: jnp.ndarray) -> jnp.ndarray:
-    return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-
-
-def compile_for_serving(cfg, args):
+def compile_for_serving(cfg, args, *, extra_prompt: int = 0):
     """One ``compile()`` call for both families (the shared CLI surface)."""
     from repro.deploy import api
 
@@ -53,7 +39,8 @@ def compile_for_serving(cfg, args):
         cfg,
         backend=args.backend,
         seq_len=args.prompt_len if is_decoder else None,
-        max_len=args.prompt_len + args.gen + 1 if is_decoder else None,
+        max_len=(args.prompt_len + extra_prompt + args.gen + 1)
+        if is_decoder else None,
         cache_dir=args.plan_cache,
         use_cache=not args.no_plan_cache,
     )
@@ -66,7 +53,7 @@ def compile_for_serving(cfg, args):
     return model
 
 
-def serve_via_plan(model, *, batch_size: int, steps: int) -> None:
+def serve_encoder(model, *, batch_size: int, steps: int) -> None:
     """Batched encoder serving through ``InferenceSession.forward``."""
     cfg, plan = model.cfg, model.artifact
     t0 = time.time()
@@ -100,108 +87,76 @@ def serve_via_plan(model, *, batch_size: int, steps: int) -> None:
     )
 
 
-def serve_decoder_via_plan(model, *, batch_size: int, prompt_len: int, gen: int) -> None:
-    """Prefill + batched continuous decode through ``InferenceSession``.
+def serve_decoder(model, *, max_batch: int, requests: int, prompt_len: int,
+                  extra_prompt: int, gen: int, sampling) -> None:
+    """Request-level serving: submit → schedule → stream, engine-only."""
+    from repro.deploy.engine import Engine
+    from repro.launch.cli import synthesize_prompts
 
-    Every generation step is ONE plan dispatch advancing all request
-    slots at their per-request positions — with staggered admission
-    (``prefill_slot``) the depths genuinely differ mid-flight.
-    """
     pair = model.artifact
     t0 = time.time()
-    session = model.session(batch_size)
-    key = jax.random.PRNGKey(0)
-    tokens = jax.random.randint(
-        key, (batch_size, prompt_len), 0, model.cfg.vocab, jnp.int32)
+    engine = Engine(model, max_batch=max_batch, sampling=sampling)
+    prompts = synthesize_prompts(model.cfg.vocab, n=requests,
+                                 prompt_len=prompt_len, extra=extra_prompt)
+    handles = [engine.submit(p, max_new_tokens=gen) for p in prompts]
+    stats = engine.run_until_idle()
+    t_total = time.time() - t0
 
-    logits = session.prefill(tokens)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    tok = greedy_token(logits)
-    out_tokens = [tok]
-    t0 = time.time()
-    for _ in range(gen):
-        logits = session.decode(tok)
-        tok = greedy_token(logits)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    toks = jnp.concatenate(out_tokens, axis=1)
     counts = pair.counts()
     print(
-        f"plan-serving [{model.backend.value}] {model.cfg.name}: prefill plan "
-        f"{counts['prefill']['nodes']} nodes ({counts['prefill']['ita']} ita), "
+        f"engine-serving [{model.backend.value}] {model.cfg.name}: "
         f"decode plan {counts['decode']['nodes']} nodes "
         f"({counts['decode']['ita']} ita); KV region "
-        f"{len(pair.kv_tensors)} tensors x {pair.max_len} tokens; "
-        f"bind+prefill {batch_size}x{prompt_len} in {t_prefill:.2f}s; "
-        f"decoded {gen} steps in {t_decode:.3f}s "
-        f"({batch_size * gen / max(t_decode, 1e-9):.1f} tok/s); "
-        f"final per-slot pos {session.pos.tolist()}"
+        f"{len(pair.kv_tensors)} tensors x {pair.max_len} tokens x "
+        f"{max_batch} slots"
     )
-    print("sample tokens:", toks[0, :8].tolist())
+    print(f"  {stats.summary()}")
+    print(f"  bind+compile+serve wall time {t_total:.2f}s "
+          f"(prefill {stats.prefill_time_s:.2f}s, decode {stats.decode_time_s:.2f}s); "
+          f"peak queue depth {stats.peak_queue_depth}")
+    for h in handles[:2]:
+        print(f"  request {h.rid}: prompt {len(h.prompt)} tokens -> "
+              f"{h.tokens[:8]} ({h.finish_reason})")
 
 
 def main(argv=None):
     from repro.deploy.lowering import UnsupportedFamilyError
-    from repro.launch.cli import add_plan_args
+    from repro.launch.cli import (
+        add_engine_args,
+        add_plan_args,
+        make_sampling,
+        resolve_requests,
+    )
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=8)
-    add_plan_args(ap, via_plan_help="serve through the compiled deployment "
-                  "artifact (compile() -> InferenceSession): encoder plan or "
-                  "decoder prefill/decode plan pair")
+    ap.add_argument("--extra-prompt", type=int, default=2,
+                    help="stagger prompt lengths up to this many tokens past "
+                         "--prompt-len (teacher-forced through batched decode)")
+    add_engine_args(ap)
+    add_plan_args(ap, via_plan_help="accepted for compatibility; serving is "
+                  "always plan-backed (compile() -> Engine/InferenceSession)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.via_plan:
-        try:
-            model = compile_for_serving(cfg, args)
-        except UnsupportedFamilyError as e:
-            raise SystemExit(f"--via-plan: {e} (use the default prefill/decode path)")
-        if model.kind == "encoder":
-            return serve_via_plan(model, batch_size=args.batch, steps=args.gen)
-        return serve_decoder_via_plan(
-            model, batch_size=args.batch, prompt_len=args.prompt_len, gen=args.gen)
-    api = build(cfg)
-    if api.prefill is None:
-        raise SystemExit(f"{cfg.name} is encoder-only; no decode loop (try --via-plan)")
-    key = jax.random.PRNGKey(0)
-    sp = api.init_serve_params(key)
-    max_len = args.prompt_len + args.gen + 1
-    prefill, decode = make_serve_fns(api, max_len)
-
-    cell = ShapeCell("serve", args.prompt_len, args.batch, "prefill")
-    batch = synthesize_batch(cfg, cell, key)
-    t0 = time.time()
-    logits, cache = prefill(sp, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    tok = greedy_token(logits)
-    out_tokens = [tok]
-    t0 = time.time()
-    for _ in range(args.gen):
-        logits, cache = decode(sp, cache, tok)
-        tok = greedy_token(logits)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    toks = jnp.concatenate(out_tokens, axis=1)
-    print(
-        f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.3f}s; "
-        f"decoded {args.gen} steps in {t_decode:.3f}s "
-        f"({args.batch * args.gen / max(t_decode, 1e-9):.1f} tok/s)"
+    try:
+        model = compile_for_serving(cfg, args, extra_prompt=args.extra_prompt)
+    except UnsupportedFamilyError as e:
+        raise SystemExit(f"cannot serve {cfg.name}: {e}")
+    if model.kind == "encoder":
+        return serve_encoder(model, batch_size=args.batch, steps=args.gen)
+    return serve_decoder(
+        model,
+        max_batch=args.batch,
+        requests=resolve_requests(args),
+        prompt_len=args.prompt_len,
+        extra_prompt=args.extra_prompt,
+        gen=args.gen,
+        sampling=make_sampling(args),
     )
-    print("sample tokens:", toks[0, :8].tolist())
-    return toks
 
 
 if __name__ == "__main__":

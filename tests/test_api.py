@@ -256,6 +256,55 @@ class TestPlanCache:
             api.CompiledModel.load(path, cfg)
 
 
+class TestPlanCacheConcurrency:
+    """Satellite: the on-disk cache is multi-process safe — concurrent
+    writers of the same fingerprint publish via temp-file + atomic
+    ``os.replace``, so no reader ever observes a torn JSON entry."""
+
+    def test_simultaneous_compiles_never_tear(self, olmo, tmp_path):
+        import json as _json
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+
+        cfg, _ = olmo
+        kw = dict(seq_len=SEQ, max_len=MAX_LEN, cache_dir=str(tmp_path))
+        probe = api.compile(cfg, seq_len=SEQ, max_len=MAX_LEN, use_cache=False)
+        path = api._cache_path(str(tmp_path), cfg, probe.fingerprint)
+        stop = threading.Event()
+        torn: list[Exception] = []
+
+        def reader():
+            # hammer the entry while writers race on os.replace: every
+            # observed state must be "absent" or "one complete document"
+            while not stop.is_set():
+                try:
+                    with open(path) as f:
+                        payload = _json.load(f)
+                    assert payload["format"] == api._PAYLOAD_FORMAT
+                except FileNotFoundError:
+                    pass
+                except Exception as e:  # torn JSON shows up here
+                    torn.append(e)
+                    return
+
+        t = threading.Thread(target=reader)
+        t.start()
+        try:
+            with ThreadPoolExecutor(max_workers=4) as ex:
+                models = list(ex.map(lambda _: api.compile(cfg, **kw), range(6)))
+        finally:
+            stop.set()
+            t.join()
+        assert not torn, torn
+        # whichever writer landed last, the entry is whole and a hit
+        assert all(m.artifact == models[0].artifact for m in models)
+        final = api.compile(cfg, **kw)
+        assert final.cache_hit
+        assert final.artifact == models[0].artifact
+        # no stray temp files left behind by the racing writers
+        assert not [p for p in tmp_path.iterdir() if p.suffix == ".tmp"]
+
+
 class TestPairRoundTrip:
     """Satellite: DecoderPlanPair JSON round trip preserves the KV link."""
 
@@ -350,15 +399,13 @@ class TestBackendNormalization:
             het.as_backend(64)
         assert het.as_backend("W8A8") is het.Backend.W8A8
 
-    def test_deprecated_shims_still_work_and_warn(self, olmo):
-        cfg, params = olmo
-        from repro.deploy.executor import plan_and_bind_decoder
+    def test_pre_api_shims_are_gone(self):
+        """The PR-3 deprecation shims were promised for one release."""
+        from repro.deploy import executor
 
-        with pytest.warns(DeprecationWarning, match="plan_and_bind_decoder"):
-            pair, weights, qp = plan_and_bind_decoder(
-                cfg, SEQ, max_len=MAX_LEN, params=params, backend="w8a8")
-        assert isinstance(pair, DecoderPlanPair)
-        assert weights and qp
+        for name in ("plan_and_bind", "plan_and_bind_decoder",
+                     "make_jit_executor", "make_decoder_executors"):
+            assert not hasattr(executor, name), name
 
 
 class TestDryrunHeadByHead:

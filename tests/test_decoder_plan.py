@@ -16,16 +16,21 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.configs.base import ArchConfig
 from repro.core import heterogeneous as het
-from repro.deploy.executor import (
-    execute_decode,
-    execute_prefill,
-    make_decoder_executors,
-    plan_and_bind_decoder,
-)
+from repro.deploy import api
+from repro.deploy.executor import execute_decode, execute_prefill
 from repro.deploy.lowering import lower, lower_decoder
 from repro.deploy.patterns import node_opdesc
 from repro.deploy.plan import DecoderPlanPair
 from repro.models import transformer as T
+
+
+def plan_and_bind_decoder(cfg, seq_len=None, *, max_len=None, params=None,
+                          backend=het.Backend.W8A8):
+    """compile() + bind, unpacked to (pair, weights, qp) for these tests."""
+    m = api.compile(cfg, backend=backend, seq_len=seq_len, max_len=max_len,
+                    use_cache=False)
+    weights, qp = m.bind(params=params)
+    return m.artifact, weights, qp
 
 SEQ, GEN = 16, 3
 MAX_LEN = SEQ + GEN + 1
@@ -80,7 +85,8 @@ class TestBitExactness:
     def test_jitted_executors(self, olmo_setup):
         """The jit-compiled closures produce the same ints as eager."""
         cfg, pair, weights, qp, batch = olmo_setup
-        prefill_fn, decode_fn = make_decoder_executors(pair)
+        prefill_fn = jax.jit(lambda w, b: execute_prefill(pair, w, b))
+        decode_fn = jax.jit(lambda w, c, t: execute_decode(pair, w, c, t))
         logits, cache = prefill_fn(weights, batch)
         ref_logits, ref_cache = T.prefill_w8a8(cfg, qp, batch, pair.max_len)
         np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))

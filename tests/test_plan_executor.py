@@ -14,17 +14,21 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.core import heterogeneous as het
-from repro.deploy.executor import (
-    bind_encoder_weights,
-    execute,
-    make_jit_executor,
-    plan_and_bind,
-)
-from repro.deploy.executor import _run_node
+from repro.deploy import api
+from repro.deploy.executor import _run_node, bind_encoder_weights, execute
 from repro.deploy.lowering import build_runtime_encoder_graph, lower, schedule
 from repro.deploy.patterns import deploy_pipeline, node_opdesc
 from repro.deploy.plan import DeploymentPlan, PlanNode
 from repro.models import encoder as EN
+
+
+def plan_and_bind(cfg, seq_len=None, *, params=None, head_by_head=False,
+                  backend=het.Backend.W8A8):
+    """compile() + bind, unpacked to (plan, weights, qp) for these tests."""
+    m = api.compile(cfg, backend=backend, seq_len=seq_len,
+                    head_by_head=head_by_head, use_cache=False)
+    weights, qp = m.bind(params=params)
+    return m.artifact, weights, qp
 
 
 @pytest.fixture(scope="module")
@@ -69,10 +73,11 @@ class TestBitExactness:
         key = jax.random.PRNGKey(3)
         params = EN.init_params(cfg, key)
         qp = EN.quantize_params(cfg, params)
-        plan, weights, _ = plan_and_bind(cfg, seq_len=64, params=params)
+        model = api.compile(cfg, seq_len=64, use_cache=False)
+        session = model.session(1, params=params)  # jitted forward
         batch = {"patches": jax.random.randint(key, (1, 64, cfg.d_model), -64, 64, jnp.int8)}
         ref = EN.forward_w8a8(cfg, qp, batch)
-        got = make_jit_executor(plan, backend=het.Backend.W8A8)(weights, batch)
+        got = session.forward(batch)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
