@@ -1,0 +1,142 @@
+"""Long-context serving: dense KV strips vs the paged block pool.
+
+The dense decoder artifact reserves ``max_len`` KV rows for every slot,
+so serving prompts of ``4-16x seq_len`` multiplies the whole batch's
+static arena by the longest context.  The paged artifact
+(``compile(..., kv_block_size=, kv_blocks=)``) pools that capacity and
+prefills long prompts in ``seq_len``-sized chunks instead of
+teacher-forcing the tail one token per decode dispatch — this benchmark
+measures both effects on the same request trace:
+
+* **KV bytes** — the statically planned cache arena
+  (:func:`repro.deploy.memory.kv_pool_bytes` vs the dense
+  ``2 * L * B * Hkv * max_len * D`` strips);
+* **tokens/s** — the engine's own :class:`EngineStats`, generated and
+  prompt throughput split (long prompts are mostly prompt work);
+* **prefill dispatches** — chunking runs ``ceil(len / seq_len)`` static
+  schedules where the dense engine teacher-forces ``len - seq_len``
+  extra decode dispatches.
+
+Run:  PYTHONPATH=src python benchmarks/long_context.py --prompt-factor 4
+      PYTHONPATH=src python benchmarks/long_context.py --smoke --csv out.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, reduced
+
+
+def kv_region_bytes(cfg, model, max_batch: int) -> int:
+    """Static KV arena bytes of one compiled artifact at ``max_batch``."""
+    from repro.deploy.memory import kv_pool_bytes
+
+    pair = model.artifact
+    if pair.paged:
+        # the pool is shared across slots: batch-independent by design
+        return kv_pool_bytes(pair.kv_blocks, pair.kv_block_size,
+                             cfg.n_kv_heads, cfg.head_dim, cfg.n_layers)
+    return 2 * cfg.n_layers * max_batch * cfg.n_kv_heads * pair.max_len * cfg.head_dim
+
+
+def run_trace(model, prompts, *, max_batch: int, gen: int):
+    from repro.deploy.engine import Engine, RequestStatus
+
+    engine = Engine(model, max_batch=max_batch)
+    # warm-up: compile prefill/decode outside the timed trace.  Two
+    # tokens, not one: a chunk-prefilled request that stops after its
+    # first sample never dispatches a decode, which would push the decode
+    # compile into the timed trace.
+    engine.submit(prompts[0], max_new_tokens=2)
+    engine.run_until_idle()
+    engine.reset_stats()
+    handles = [engine.submit(p, max_new_tokens=gen) for p in prompts]
+    stats = engine.run_until_idle(max_steps=100_000)
+    assert all(h.status is RequestStatus.DONE for h in handles)
+    finished = sum(h.finish_reason == "length" for h in handles)
+    return stats, finished
+
+
+def main(argv=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.deploy import api
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--backend", default="w8a8")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--seq-len", type=int, default=8)
+    ap.add_argument("--prompt-factor", type=int, default=4,
+                    help="prompt length as a multiple of seq_len (4..16 is "
+                         "the paper-relevant long-context regime)")
+    ap.add_argument("--gen", type=int, default=4)
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="paged block size (default: seq_len // 2)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="pool budget (default: 1.5 long prompts' worth — "
+                         "deliberately far below max_batch * max_len rows)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed shape for CI (implies reduced config)")
+    ap.add_argument("--csv", default=None, metavar="FILE",
+                    help="also write the CSV rows to FILE")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.requests, args.gen = 2, 4, 2
+
+    cfg = reduced(get_config(args.arch))
+    seq = args.seq_len
+    prompt_len = args.prompt_factor * seq
+    max_len = prompt_len + args.gen + 1
+    block = args.kv_block_size or max(1, seq // 2)
+    from repro.deploy.paging import blocks_for_rows
+
+    per_prompt = blocks_for_rows(max_len, block)
+    kv_blocks = args.kv_blocks or (per_prompt + per_prompt // 2)
+
+    key = jax.random.PRNGKey(0)
+    prompts = [
+        [int(t) for t in jax.random.randint(jax.random.fold_in(key, i),
+                                            (prompt_len,), 0, cfg.vocab,
+                                            jnp.int32)]
+        for i in range(args.requests)
+    ]
+
+    rows = ["mode,requests,prompt_len,seq_len,kv_bytes,prefill_dispatches,"
+            "decode_dispatches,gen_tok_per_s,prompt_tok_per_s,finished"]
+    results = {}
+    for mode in ("dense", "paged"):
+        kw = dict(backend=args.backend, seq_len=seq, max_len=max_len,
+                  use_cache=False)
+        if mode == "paged":
+            kw.update(kv_block_size=block, kv_blocks=kv_blocks)
+        model = api.compile(cfg, **kw)
+        stats, finished = run_trace(model, prompts, max_batch=args.batch,
+                                    gen=args.gen)
+        bytes_ = kv_region_bytes(cfg, model, args.batch)
+        results[mode] = (stats, bytes_)
+        rows.append(
+            f"{mode},{args.requests},{prompt_len},{seq},{bytes_},"
+            f"{stats.prefill_dispatches},{stats.decode_dispatches},"
+            f"{stats.tokens_per_s():.1f},{stats.prompt_tokens_per_s():.1f},"
+            f"{finished}"
+        )
+    for r in rows:
+        print(r)
+    dense, paged = results["dense"], results["paged"]
+    shrink = dense[1] / max(paged[1], 1)
+    disp = dense[0].decode_dispatches / max(paged[0].decode_dispatches, 1)
+    print(f"# paged KV region: {shrink:.1f}x smaller static arena, "
+          f"{disp:.1f}x fewer decode dispatches at {args.prompt_factor}x "
+          f"seq_len prompts (chunked prefill replaces teacher forcing)")
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("\n".join(rows) + "\n")
+        print(f"# csv written to {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

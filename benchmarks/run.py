@@ -7,6 +7,8 @@
   roofline              §Roofline terms from the dry-run artifacts
   engine_throughput     request-level serving engine: continuous
                         batching vs serial on the compiled artifact
+  long_context          paged KV block pool + chunked prefill vs the
+                        dense per-slot region at 4-16x seq_len prompts
 
 Prints ``name,us_per_call,derived``-style CSV per section.
 """
@@ -48,6 +50,11 @@ def main() -> None:
 
     engine_throughput.main(["--batch", "2", "--requests", "4",
                             "--prompt-len", "8", "--gen", "4"])
+
+    _section("long_context (paged KV pool vs dense region)")
+    from benchmarks import long_context
+
+    long_context.main(["--smoke"])
 
     print(f"\n# benchmarks completed in {time.time() - t0:.1f}s")
 

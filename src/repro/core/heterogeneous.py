@@ -208,6 +208,14 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
                       s_out, block_k) -> int8  [B, 1, H*D]
       cache_write: fn(kv, cache | None, pos | None, *, kv_heads, head_dim,
                       max_len) -> int8  [B, Hkv, max_len, D]
+      attn_paged:  fn(q, k_pool, v_pool, pos, block_table, *, heads,
+                      kv_heads, head_dim, s_act, s_out, block_k)
+                      -> int8  [B, S, H*D] (block-table gather; S = 1 for
+                      decode, S = seq_len for a prefill chunk)
+      cache_write_paged: fn(kv, pool, pos, block_table, active | None, *,
+                      kv_heads, head_dim, block_size)
+                      -> int8 pool [P+1, Hkv, block_size, D] (scatter at
+                      per-lane rows; inactive lanes land in scratch)
       silumul:     fn(gate_q, up_q, *, scales) -> int8
       lasttok:     fn(x_q) -> int8 (last sequence position)
       lmhead:      fn(h_q, w_q, *, scale, tied) -> float32
@@ -412,6 +420,70 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
         return jax.lax.dynamic_update_slice(cache, kh, (0, 0, pos, 0))
 
     table.register("cache_write", Engine.CLUSTER, _cache_write)
+
+    # -- paged KV region (shared block pool + per-slot block tables).
+    # Pool layout [P+1, Hkv, block_size, D]: physical block 0 is scratch
+    # (repro.deploy.paging.SCRATCH_BLOCK) — unallocated table entries and
+    # inactive dispatch lanes route there, so a batched dispatch can carry
+    # parked lanes without touching any live slot's rows.
+    def _norm_table(table_q, b):
+        t = jnp.asarray(table_q, jnp.int32)
+        if t.ndim == 1:
+            t = t[None]
+        return jnp.broadcast_to(t, (b, t.shape[-1]))
+
+    def _cache_write_paged(kv_m, pool, pos, table_q, active=None, *,
+                           kv_heads, head_dim, block_size):
+        from repro.deploy.paging import SCRATCH_BLOCK
+
+        kh = _split(kv_m, kv_heads, head_dim)  # [B, Hkv, S, D]
+        b, _, s, _ = kh.shape
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        table_q = _norm_table(table_q, b)
+        rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None]  # [B, S]
+        phys = jnp.take_along_axis(table_q, rows // block_size, axis=1)
+        if active is not None:
+            act = jnp.asarray(active).astype(bool).reshape(-1)[:, None]
+            phys = jnp.where(act, phys, jnp.int32(SCRATCH_BLOCK))
+        # one scatter, unique (block, row) targets across live lanes (the
+        # allocator never maps one block to two slots; scratch duplicates
+        # are dont-care rows)
+        vals = kh.transpose(0, 2, 1, 3).reshape(b * s, kv_heads, head_dim)
+        return pool.at[phys.reshape(-1), :, (rows % block_size).reshape(-1), :].set(
+            vals
+        )
+
+    table.register("cache_write_paged", Engine.CLUSTER, _cache_write_paged)
+
+    def _attn_paged(q_m, k_pool, v_pool, pos, table_q, *, heads, kv_heads,
+                    head_dim, s_act, s_out, block_k):
+        p = MhaQParams.make_flash(s_act, s_act, s_act, s_out, max(head_dim, 1))
+        qh = _split(q_m, heads, head_dim)  # [B, H, S, D]
+        b, _, s, _ = qh.shape
+        table_q = _norm_table(table_q, b)
+        # block-table gather: the slot's logical cache is its blocks
+        # concatenated in table order [B, nb*block_size, ...]; rows past
+        # the valid prefix (scratch or stale blocks) are masked below, and
+        # fully-masked flash updates are bit-neutral, so the gathered
+        # width does not change the ints.
+        kg = k_pool[table_q].transpose(0, 2, 1, 3, 4).reshape(
+            b, kv_heads, -1, head_dim)
+        vg = v_pool[table_q].transpose(0, 2, 1, 3, 4).reshape(
+            b, kv_heads, -1, head_dim)
+        rows = kg.shape[2]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        # query i sits at global row pos + i and attends rows [0, pos + i]
+        # — causality at a chunk offset expressed as a per-query kv_len
+        # bound, so decode (S = 1) and chunked prefill share one runner
+        kv_len = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None] + 1
+        bk = min(block_k, rows)
+        if rows % bk:
+            bk = rows  # keep flash partitioning valid for any pool size
+        out = attention_decode_i8(qh, kg, vg, kv_len[:, None, :, None], p,
+                                  block_k=bk)
+        return _merge(out)
+
+    table.register("attn_paged", Engine.CLUSTER, _attn_paged)
 
     def _silu_mul(g_q, u_q, *, scales):
         s_g, s_u, s_out = scales

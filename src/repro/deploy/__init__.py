@@ -33,6 +33,7 @@ from repro.deploy import (  # noqa: F401
     hlo_analysis,
     lowering,
     memory,
+    paging,
     patterns,
     plan,
     tiler,
@@ -46,6 +47,10 @@ from repro.deploy.api import (  # noqa: F401
     compile,
     config_fingerprint,
     is_dense_decoder,
+)
+from repro.deploy.paging import (  # noqa: F401
+    BlockAllocator,
+    chunk_starts,
 )
 from repro.deploy.engine import (  # noqa: F401
     Engine,

@@ -40,6 +40,18 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy.paging import (
+    SCRATCH_BLOCK,
+    BlockAllocator,
+    PoolExhausted,
+    blocks_for_rows,
+    chunk_starts,
+)
+from repro.deploy.paging import (
+    blocks_per_slot as _blocks_per_slot,
+)
 
 from repro.configs.base import ArchConfig
 from repro.core.heterogeneous import (
@@ -57,33 +69,56 @@ from repro.deploy.plan import DecoderPlanPair, DeploymentPlan
 
 #: Bumped whenever lowering/executor changes can alter plan *content* or
 #: *semantics*.  Cached plans from other versions are recompiled.
-COMPILER_VERSION = 3
+#: v4: paged KV region (kv_block_size/kv_blocks options, pool-shaped
+#: cache tensors) + strict fingerprint canonicalization.
+COMPILER_VERSION = 4
 
 _PAYLOAD_FORMAT = "repro.deploy.api/compiled-model"
 
 
 class KVCapacityError(ValueError):
-    """A decode dispatch would write past the statically planned KV region.
+    """A decode dispatch (or prefill chunk) cannot fit the KV region.
 
     Carries exactly *which* request slots are out of capacity so a
     scheduler (:class:`repro.deploy.engine.Engine`) can evict precisely —
     finish those requests, recycle their slots — and re-dispatch the
     survivors, instead of tearing down the whole batch.
 
+    Two causes share this type (callers branch on the attributes, not
+    the message):
+
+    * ``reason == "max_len"`` — dense region or block-table width: a
+      slot's depth reached the compiled ``max_len``.
+    * ``reason == "pool"`` — paged region only: the shared block pool is
+      exhausted; ``slots`` are the requests that could not grow and
+      ``evictable`` names the *other* live slots currently holding pool
+      blocks (the candidates whose eviction frees capacity).
+
     Attributes: ``slots`` (tuple of offending slot indices), ``pos``
     (their per-slot depths, same order), ``max_len`` (the region's
-    planned capacity).
+    planned per-slot capacity), ``reason``, ``evictable``.
     """
 
-    def __init__(self, slots, pos, max_len: int):
+    def __init__(self, slots, pos, max_len: int, *, reason: str = "max_len",
+                 evictable=()):
         self.slots = tuple(int(s) for s in slots)
         self.pos = tuple(int(p) for p in pos)
         self.max_len = int(max_len)
-        super().__init__(
-            f"KV region full: slot(s) {list(self.slots)} at pos "
-            f"{list(self.pos)} >= max_len {self.max_len}; re-admit via "
-            f"prefill_slot or compile with a larger max_len"
-        )
+        self.reason = reason
+        self.evictable = tuple(int(s) for s in evictable)
+        if reason == "pool":
+            msg = (
+                f"paged KV pool exhausted: slot(s) {list(self.slots)} at pos "
+                f"{list(self.pos)} need new blocks and none are free; "
+                f"evictable slot(s) holding blocks: {list(self.evictable)}"
+            )
+        else:
+            msg = (
+                f"KV region full: slot(s) {list(self.slots)} at pos "
+                f"{list(self.pos)} >= max_len {self.max_len}; re-admit via "
+                f"prefill_slot or compile with a larger max_len"
+            )
+        super().__init__(msg)
 
 
 # ---------------------------------------------------------------------------
@@ -97,19 +132,59 @@ def default_cache_dir() -> str:
     )
 
 
+def _canonical(obj, path: str = "payload"):
+    """JSON-stable normal form of a fingerprint payload value.
+
+    Strict on purpose: a value serialized through a fallback like
+    ``repr`` can embed object identity (``<object at 0x7f...>``) — the
+    fingerprint then differs every process and the plan cache silently
+    becomes a permanent miss.  Anything that is not a plain JSON scalar /
+    list / tuple / str-keyed dict fails loudly instead.
+    """
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        if obj != obj or obj in (float("inf"), float("-inf")):
+            raise TypeError(f"{path}: non-finite float {obj!r} is not JSON-stable")
+        return obj
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v, f"{path}[{i}]") for i, v in enumerate(obj)]
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"{path}: dict key {k!r} is not a string — fingerprint "
+                    f"payloads must be JSON-stable"
+                )
+            out[k] = _canonical(v, f"{path}.{k}")
+        return out
+    raise TypeError(
+        f"{path}: {type(obj).__name__} value {obj!r} is not JSON-stable; "
+        f"config/options entries must be None/bool/int/float/str or "
+        f"lists/tuples/str-dicts of those (a repr fallback would embed "
+        f"object identity and silently break cross-process cache hits)"
+    )
+
+
 def config_fingerprint(cfg: ArchConfig, options: dict | None = None) -> str:
     """Stable hash of (full config, resolved lowering options).
+
+    The payload is canonicalized strictly (:func:`_canonical` raises
+    ``TypeError`` on any value JSON cannot represent stably), so two
+    processes — today or after a restart — always fingerprint the same
+    (config, options) identically.
 
     The compiler version is deliberately *not* part of the fingerprint —
     it is stored (and checked) separately in the cache payload, so a
     version bump invalidates entries in place instead of leaking stale
     files under new keys.
     """
-    payload = {
+    payload = _canonical({
         "config": dataclasses.asdict(cfg),
         "options": dict(sorted((options or {}).items())),
-    }
-    blob = json.dumps(payload, sort_keys=True, default=repr).encode()
+    })
+    blob = json.dumps(payload, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()
 
 
@@ -291,6 +366,8 @@ def compile(  # noqa: A001 — torch.compile precedent
     backend: Backend | str = Backend.W8A8,
     seq_len: int | None = None,
     max_len: int | None = None,
+    kv_block_size: int | None = None,
+    kv_blocks: int | None = None,
     head_by_head: bool = False,
     include_head: bool = True,
     cache_dir: str | None = None,
@@ -302,6 +379,14 @@ def compile(  # noqa: A001 — torch.compile precedent
     execution ``backend`` (64 for the ASIC-faithful W8A8 arithmetic, 128
     for the Pallas/TPU kernels), so the engine column matches what
     ``DispatchTable.resolve`` does at run time.
+
+    ``kv_block_size`` + ``kv_blocks`` (decoder family only, both or
+    neither) switch the KV region from dense per-slot ``max_len`` strips
+    to a **paged** shared block pool with per-slot block tables — the
+    pool budget is ``kv_blocks`` blocks *total* across all request
+    slots, so long-context capacity is pooled instead of reserved
+    worst-case per slot, and prompts beyond ``seq_len`` prefill in
+    chunks (see DEPLOY.md "Paged KV region").
 
     Cache semantics: the key is ``config_fingerprint(cfg, options)`` —
     the *full* config plus every resolved lowering option (backend
@@ -315,11 +400,26 @@ def compile(  # noqa: A001 — torch.compile precedent
     granule = backend_granule(be)
     s = seq_len or cfg.max_seq
     is_decoder = is_dense_decoder(cfg)
+    if (kv_block_size is None) != (kv_blocks is None):
+        raise ValueError(
+            "kv_block_size and kv_blocks come as a pair (both set the "
+            "paged KV region, both absent keeps the dense region)"
+        )
+    bs, nb = int(kv_block_size or 0), int(kv_blocks or 0)
+    # (paged options on a non-decoder family are rejected by lower() —
+    # one copy of that predicate and message, not two)
+    if (bs < 0 or nb < 0) or (bool(bs) != bool(nb)):
+        raise ValueError(
+            f"kv_block_size/kv_blocks must both be positive, got "
+            f"{kv_block_size}/{kv_blocks}"
+        )
     options = {
         "backend": be.value,
         "granule": granule,
         "seq_len": s,
         "max_len": (max_len or s + 1) if is_decoder else 0,
+        "kv_block_size": bs,
+        "kv_blocks": nb,
         "head_by_head": head_by_head,
         "include_head": include_head,
     }
@@ -337,7 +437,7 @@ def compile(  # noqa: A001 — torch.compile precedent
 
     artifact = lower(
         cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
-        max_len=max_len, granule=granule,
+        max_len=max_len, kv_block_size=bs, kv_blocks=nb, granule=granule,
     )
     model = CompiledModel(
         cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
@@ -375,7 +475,13 @@ class InferenceSession:
         key=None,
         table: DispatchTable | None = None,
     ):
-        from repro.deploy.executor import execute, execute_decode, execute_prefill
+        from repro.deploy.executor import (
+            execute,
+            execute_decode,
+            execute_decode_paged,
+            execute_prefill,
+            execute_prefill_paged,
+        )
 
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
@@ -388,15 +494,39 @@ class InferenceSession:
         if model.kind == "decoder":
             pair = model.artifact
             self._pair = pair
-            self._prefill_fn = jax.jit(
-                lambda w, b: execute_prefill(pair, w, b, backend=be, table=tb)
-            )
-            self._decode_fn = jax.jit(
-                lambda w, c, t, p: execute_decode(pair, w, c, t, pos=p,
-                                                  backend=be, table=tb)
-            )
-            self._kv = None  # {"k": [L,B,Hkv,M,D] int8, "v": ...}
-            self._pos = None  # int32 [B] per-slot generation depth
+            self._kv = None  # dense: {"k": [L,B,Hkv,M,D] int8, "v": ...}
+            self._pos = None  # HOST int32 [B] per-slot depth (numpy: the
+            # decode hot path must not round-trip to the device per token)
+            if pair.paged:
+                self._chunk_fn = jax.jit(
+                    lambda w, pl, t, st, bt: execute_prefill_paged(
+                        pair, w, pl, t, st, bt, backend=be, table=tb)
+                )
+                self._decode_fn = jax.jit(
+                    lambda w, pl, t, p, bt, act: execute_decode_paged(
+                        pair, w, pl, t, p, bt, act, backend=be, table=tb)
+                )
+                cfgm = model.cfg
+                shape = (cfgm.n_layers, pair.kv_blocks + 1, cfgm.n_kv_heads,
+                         pair.kv_block_size, cfgm.head_dim)
+                self._pool = {"k": jnp.zeros(shape, jnp.int8),
+                              "v": jnp.zeros(shape, jnp.int8)}
+                self._alloc = BlockAllocator(pair.kv_blocks)
+                self._table_width = _blocks_per_slot(pair.max_len,
+                                                     pair.kv_block_size)
+                self._tables = np.full((batch_size, self._table_width),
+                                       SCRATCH_BLOCK, np.int32)
+                self._slot_blocks: list[list[int]] = [
+                    [] for _ in range(batch_size)
+                ]
+            else:
+                self._prefill_fn = jax.jit(
+                    lambda w, b: execute_prefill(pair, w, b, backend=be, table=tb)
+                )
+                self._decode_fn = jax.jit(
+                    lambda w, c, t, p: execute_decode(pair, w, c, t, pos=p,
+                                                      backend=be, table=tb)
+                )
         else:
             plan = model.artifact
             self._plan = plan
@@ -444,16 +574,51 @@ class InferenceSession:
         return self._pair.max_len
 
     @property
+    def paged(self) -> bool:
+        """Is the KV region a shared block pool (vs dense per-slot strips)?"""
+        self._require("decoder", "paged")
+        return self._pair.paged
+
+    @property
+    def kv_block_size(self) -> int:
+        self._require("decoder", "kv_block_size")
+        return self._pair.kv_block_size
+
+    @property
+    def kv_blocks(self) -> int:
+        self._require("decoder", "kv_blocks")
+        return self._pair.kv_blocks
+
+    @property
+    def blocks_free(self) -> int:
+        """Free blocks in the paged pool (0 for dense sessions)."""
+        self._require("decoder", "blocks_free")
+        return self._alloc.n_free if self._pair.paged else 0
+
+    def blocks_held(self, slot: int) -> int:
+        """Pool blocks currently owned by one slot (0 for dense)."""
+        self._require("decoder", "blocks_held")
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        return len(self._slot_blocks[slot]) if self._pair.paged else 0
+
+    @property
     def pos(self):
-        """Per-slot generation depth, int32 [batch_size]."""
+        """Per-slot generation depth, host int32 [batch_size] (numpy)."""
         self._require("decoder", "pos")
         return self._pos
 
     @property
     def kv_cache(self) -> dict | None:
-        """The batched KV region: ``{"k": [L,B,Hkv,max_len,D], "v": ...}``."""
+        """The batched dense KV region: ``{"k": [L,B,Hkv,max_len,D], ...}``."""
         self._require("decoder", "kv_cache")
         return self._kv
+
+    @property
+    def kv_pool(self) -> dict | None:
+        """The shared paged pool: ``{"k": [L,P+1,Hkv,block_size,D], ...}``."""
+        self._require("decoder", "kv_pool")
+        return self._pool if self._pair.paged else None
 
     def _check_tokens(self, tokens, rows: int):
         tokens = jnp.asarray(tokens, jnp.int32)
@@ -470,53 +635,208 @@ class InferenceSession:
         """Prefill every slot with one prompt each: tokens int32 [B, S].
 
         Returns the last-token logits [B, 1, vocab_padded] and resets all
-        slots to depth ``S``.
+        slots to depth ``S``.  Paged sessions release every slot's blocks
+        first and allocate fresh ones for rows ``[0, S)`` (all slots, one
+        batched chunk-0 dispatch).
         """
         self._require("decoder", "prefill")
         tokens = self._check_tokens(tokens, self.batch_size)
-        logits, cache = self._prefill_fn(self.weights, {"tokens": tokens})
-        self._kv = {"k": cache["k"], "v": cache["v"]}
-        self._pos = jnp.full((self.batch_size,), self._pair.seq_len, jnp.int32)
+        s = self._pair.seq_len
+        if self._pair.paged:
+            # capacity is statically decidable (every slot is about to be
+            # released, so the whole pool would be free) — check BEFORE
+            # the destructive release, or a failed prefill would leave
+            # scratched tables under stale nonzero depths
+            need = blocks_for_rows(s, self._pair.kv_block_size)
+            if self._pair.kv_blocks < need * self.batch_size:
+                raise KVCapacityError(
+                    list(range(self.batch_size)), [0] * self.batch_size,
+                    self._pair.max_len, reason="pool",
+                )
+            for b in range(self.batch_size):
+                self._release_blocks(b)
+            for b in range(self.batch_size):
+                self._grow_table(b, need)
+            logits, self._pool = self._chunk_fn(
+                self.weights, self._pool, tokens, jnp.int32(0),
+                jnp.asarray(self._tables),
+            )
+        else:
+            logits, cache = self._prefill_fn(self.weights, {"tokens": tokens})
+            self._kv = {"k": cache["k"], "v": cache["v"]}
+        self._pos = np.full((self.batch_size,), s, np.int32)
         return logits
 
     def prefill_slot(self, slot: int, tokens):
         """Admit a new request into one slot (continuous batching).
 
-        Runs the prefill schedule at batch 1 and installs the resulting
-        KV rows + depth into slot ``slot``; the other slots' cache rows
-        and positions are untouched, so they keep decoding mid-flight.
-        Returns the new request's last-token logits [1, 1, vocab_padded].
+        Dense: runs the prefill schedule at batch 1 and installs the
+        resulting KV rows + depth into slot ``slot``; the other slots'
+        cache rows and positions are untouched, so they keep decoding
+        mid-flight.  Paged: additionally accepts prompts of any length
+        ``seq_len <= T <= max_len`` — the static schedule runs in
+        ``seq_len``-sized chunks writing through the slot's block table
+        (see :meth:`prefill_chunk` to drive the chunks one dispatch at a
+        time).  Returns the prompt's last-token logits
+        [1, 1, vocab_padded].
         """
         self._require("decoder", "prefill_slot")
         if not 0 <= slot < self.batch_size:
             raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        if self._pair.paged:
+            tokens = jnp.asarray(tokens, jnp.int32)
+            if tokens.ndim == 1:
+                tokens = tokens[None]
+            t = tokens.shape[-1]
+            if tokens.shape != (1, t) or not (
+                self._pair.seq_len <= t <= self._pair.max_len
+            ):
+                raise ValueError(
+                    f"paged prefill_slot tokens must be [1, T] with "
+                    f"{self._pair.seq_len} <= T <= {self._pair.max_len}, "
+                    f"got {tuple(tokens.shape)}"
+                )
+            logits = None
+            for start in chunk_starts(t, self._pair.seq_len):
+                logits = self.prefill_chunk(
+                    slot, tokens[:, start : start + self._pair.seq_len], start
+                )
+            return logits
         tokens = self._check_tokens(tokens, 1)
         logits, cache = self._prefill_fn(self.weights, {"tokens": tokens})
         if self._kv is None:
             l, _, hkv, m, d = cache["k"].shape
             zeros = jnp.zeros((l, self.batch_size, hkv, m, d), cache["k"].dtype)
             self._kv = {"k": zeros, "v": zeros}
-            self._pos = jnp.zeros((self.batch_size,), jnp.int32)
+            self._pos = np.zeros((self.batch_size,), np.int32)
         self._kv = {
             "k": self._kv["k"].at[:, slot].set(cache["k"][:, 0]),
             "v": self._kv["v"].at[:, slot].set(cache["v"][:, 0]),
         }
-        self._pos = self._pos.at[slot].set(self._pair.seq_len)
+        self._pos[slot] = self._pair.seq_len
         return logits
 
-    def decode(self, tokens, pos=None):
+    def prefill_chunk(self, slot: int, tokens, start: int):
+        """One chunked-prefill dispatch (paged sessions only).
+
+        Runs the static ``seq_len``-token prefill schedule at global
+        token offset ``start``, writing cache rows ``[start, start +
+        seq_len)`` of slot ``slot`` through its block table — so a
+        prompt of ``T`` tokens prefills in ``<= ceil(T / seq_len)``
+        dispatches (:func:`repro.deploy.paging.chunk_starts`) instead of
+        ``T - seq_len`` teacher-forced decode steps.  ``start == 0``
+        recycles the slot (frees its blocks) first; later chunks may
+        overlap the previous one (the final chunk is pinned to the
+        prompt tail), which is bit-neutral because every token's K/V is
+        a pure function of its prefix.  A scheduler interleaves these
+        dispatches with batched decodes of the resident slots.
+
+        Returns the chunk's last-token logits [1, 1, vocab_padded];
+        raises :class:`KVCapacityError` (``reason="pool"``) when the
+        blocks for the chunk's rows cannot be allocated.
+        """
+        self._require("decoder", "prefill_chunk")
+        if not self._pair.paged:
+            raise RuntimeError(
+                "prefill_chunk needs a paged session; compile with "
+                "kv_block_size/kv_blocks"
+            )
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        tokens = self._check_tokens(tokens, 1)
+        s = self._pair.seq_len
+        if self._pos is None:
+            self._pos = np.zeros((self.batch_size,), np.int32)
+        if start == 0:
+            self._release_blocks(slot)
+        elif not 0 < start <= int(self._pos[slot]):
+            raise ValueError(
+                f"chunk at start {start} leaves a gap: slot {slot} has "
+                f"{int(self._pos[slot])} rows (chunks must be contiguous "
+                f"or overlapping)"
+            )
+        if start + s > self._pair.max_len:
+            raise KVCapacityError([slot], [start], self._pair.max_len)
+        need = blocks_for_rows(start + s, self._pair.kv_block_size)
+        self._grow_table(slot, need)
+        logits, self._pool = self._chunk_fn(
+            self.weights, self._pool, tokens, jnp.int32(start),
+            jnp.asarray(self._tables[slot : slot + 1]),
+        )
+        self._pos[slot] = start + s
+        return logits
+
+    def free_slot(self, slot: int) -> None:
+        """Release one slot's KV state (paged: return its blocks to the
+        pool so other requests can grow into them).  The scheduler calls
+        this on eviction/completion; dense sessions only reset the depth.
+        """
+        self._require("decoder", "free_slot")
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        if self._pair.paged:
+            self._release_blocks(slot)
+        if self._pos is not None:
+            self._pos[slot] = 0
+
+    # -- paged internals ---------------------------------------------------
+
+    def _release_blocks(self, slot: int) -> None:
+        if self._slot_blocks[slot]:
+            self._alloc.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+        self._tables[slot, :] = SCRATCH_BLOCK
+
+    def _grow_table(self, slot: int, need: int) -> None:
+        """Allocate blocks until slot's table covers ``need`` logical
+        blocks; all-or-nothing, raising the structured pool-exhaustion
+        error with the evictable block holders named."""
+        missing = [i for i in range(need)
+                   if self._tables[slot, i] == SCRATCH_BLOCK]
+        if not missing:
+            return
+        try:
+            got = self._alloc.allocate(len(missing), owner=slot)
+        except PoolExhausted:
+            evictable = sorted(
+                b for b in range(self.batch_size)
+                if b != slot and self._slot_blocks[b]
+            )
+            pos = 0 if self._pos is None else int(self._pos[slot])
+            raise KVCapacityError(
+                [slot], [pos], self._pair.max_len, reason="pool",
+                evictable=evictable,
+            ) from None
+        for i, blk in zip(missing, got):
+            self._tables[slot, i] = blk
+        self._slot_blocks[slot].extend(got)
+
+    def decode(self, tokens, pos=None, *, active=None):
         """One batched continuous-decode dispatch.
 
         ``tokens`` int32 [B] or [B, 1] — the next token of each request.
         ``pos`` int32 [B] — each request's current depth (defaults to the
-        session's tracked per-slot positions).  Slot ``b`` RoPE-rotates
-        by ``pos[b]``, appends its K/V at cache row ``pos[b]`` and
-        attends rows ``[0, pos[b]]`` — one dispatch, B depths.  Returns
-        logits [B, 1, vocab_padded]; positions advance to ``pos + 1``.
+        session's tracked per-slot positions; tracked **host-side** as
+        numpy, so the per-token scheduler loop never round-trips to the
+        device for bookkeeping).  Slot ``b`` RoPE-rotates by ``pos[b]``,
+        appends its K/V at cache row ``pos[b]`` and attends rows
+        ``[0, pos[b]]`` — one dispatch, B depths.  Returns logits
+        [B, 1, vocab_padded]; active positions advance to ``pos + 1``.
+
+        ``active`` (paged sessions only) is a per-lane bool mask: a
+        static-shape dispatch can carry parked lanes (free slots, slots
+        mid-chunked-prefill) whose writes land in the scratch block, who
+        skip capacity checks and whose depth does not advance.
         """
         self._require("decoder", "decode")
-        if self._kv is None:
+        paged = self._pair.paged
+        if (self._kv is None) if not paged else (self._pos is None):
             raise RuntimeError("decode before prefill: no KV state in the session")
+        if active is not None and not paged:
+            raise ValueError(
+                "active lane masks are a paged-session feature (dense "
+                "dispatches park free lanes at pos 0 instead)"
+            )
         tokens = jnp.asarray(tokens, jnp.int32)
         if tokens.ndim == 1:
             tokens = tokens[:, None]
@@ -525,23 +845,49 @@ class InferenceSession:
                 f"decode tokens must be [{self.batch_size}, 1], got "
                 f"{tuple(tokens.shape)}"
             )
-        pos = self._pos if pos is None else jnp.asarray(pos, jnp.int32)
+        # pos/active stay on the host: capacity checks and the +1 advance
+        # are numpy, so a decode step costs exactly one device dispatch
+        # (int(jnp.max(pos)) here used to sync per token — the ISSUE 5
+        # hot-path fix).
+        pos = self._pos if pos is None else np.asarray(pos, np.int32)
         if pos.shape != (self.batch_size,):
             raise ValueError(
                 f"pos must be a per-request vector [{self.batch_size}], got "
                 f"{tuple(pos.shape)}"
             )
-        # pos is a concrete host-side array here (jit boundary is below):
-        # past-capacity writes would silently clamp inside
-        # dynamic_update_slice and corrupt the deepest cache row, so bound
-        # them loudly instead — with the offending slots attached, so a
-        # scheduler can evict exactly those and re-dispatch the rest.
-        if int(jnp.max(pos)) >= self._pair.max_len:
-            full = [b for b in range(self.batch_size)
-                    if int(pos[b]) >= self._pair.max_len]
+        act = (np.ones((self.batch_size,), bool) if active is None
+               else np.asarray(active, bool).reshape(-1))
+        if act.shape != (self.batch_size,):
+            raise ValueError(
+                f"active must be a per-request mask [{self.batch_size}], "
+                f"got {tuple(act.shape)}"
+            )
+        # past-capacity writes would silently clamp inside the scatter and
+        # corrupt the deepest cache row, so bound them loudly instead —
+        # with the offending slots attached, so a scheduler can evict
+        # exactly those and re-dispatch the rest.
+        full = [b for b in range(self.batch_size)
+                if act[b] and int(pos[b]) >= self._pair.max_len]
+        if full:
             raise KVCapacityError(full, [int(pos[b]) for b in full],
                                   self._pair.max_len)
-        logits, cache = self._decode_fn(self.weights, self._kv, tokens, pos)
-        self._kv = {"k": cache["k"], "v": cache["v"]}
-        self._pos = pos + 1
+        if paged:
+            # crossing into a new logical block allocates it up front —
+            # pool exhaustion surfaces as a structured error BEFORE any
+            # device state changes, naming the evictable block holders
+            bs = self._pair.kv_block_size
+            for b in range(self.batch_size):
+                if act[b] and int(pos[b]) % bs == 0:
+                    self._grow_table(b, int(pos[b]) // bs + 1)
+            logits, self._pool = self._decode_fn(
+                self.weights, self._pool, tokens, jnp.asarray(pos),
+                jnp.asarray(self._tables), jnp.asarray(act),
+            )
+        else:
+            logits, cache = self._decode_fn(self.weights, self._kv, tokens,
+                                            jnp.asarray(pos))
+            self._kv = {"k": cache["k"], "v": cache["v"]}
+        self._pos = np.where(act, pos + 1,
+                             self._pos if self._pos is not None else 0
+                             ).astype(np.int32)
         return logits

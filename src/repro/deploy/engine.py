@@ -25,11 +25,18 @@ artifact:
   the moment a token is sampled.
 
 Prompt lengths are *at least* the compiled prompt length ``S`` (the
-prefill schedule is static): the first ``S`` tokens go through
-``prefill_slot``, any remaining prompt tokens are teacher-forced through
-the same batched decode dispatches (status ``PREFILLING``) before
-generation starts (status ``DECODING``) — so mixed prompt lengths share
-one plan.
+prefill schedule is static).  Dense KV region: the first ``S`` tokens go
+through ``prefill_slot``, any remaining prompt tokens are teacher-forced
+through the same batched decode dispatches (status ``PREFILLING``)
+before generation starts (status ``DECODING``) — so mixed prompt lengths
+share one plan.  **Paged** KV region (``compile(...,
+kv_block_size=, kv_blocks=)``): the whole prompt prefills in ``S``-sized
+chunks through the slot's block table — ``<= ceil(len / S)`` prefill
+dispatches instead of ``len - S`` teacher-forced decode dispatches, one
+chunk per scheduler step interleaved with the residents' batched decodes
+— and admission/eviction are pool-occupancy-aware: a prompt is admitted
+only when the pool has unpledged blocks for all of it, and a finished or
+evicted request's blocks return to the pool immediately.
 
 Everything stays bit-exact vs independent single-request
 ``decode_step_w8a8`` trajectories (slot isolation is row-local; tested
@@ -48,8 +55,10 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.deploy.api import CompiledModel, InferenceSession, KVCapacityError
+from repro.deploy.paging import blocks_for_rows, chunk_starts
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +172,7 @@ class EngineStats:
     decode_dispatches: int = 0
     tokens_generated: int = 0
     prompt_tokens_forced: int = 0  # prompt tail consumed through decode
+    prompt_tokens_prefilled: int = 0  # prompt tokens consumed by prefill/chunk
     slot_steps_busy: int = 0       # sum over dispatches of resident requests
     queue_depth: int = 0
     peak_queue_depth: int = 0
@@ -175,9 +185,20 @@ class EngineStats:
         return self.slot_steps_busy / max(1, self.decode_dispatches * self.max_batch)
 
     def tokens_per_s(self) -> float:
-        """Generated tokens over total dispatch time (prefill + decode)."""
+        """*Generated* tokens over total dispatch time (prefill + decode).
+
+        Prompt processing is reported separately
+        (:meth:`prompt_tokens_per_s`): teacher-forced prompt tails and
+        prefill chunks consume dispatches but generate nothing, so
+        folding them in here would understate long-prompt serving."""
         return self.tokens_generated / max(self.prefill_time_s + self.decode_time_s,
                                            1e-9)
+
+    def prompt_tokens_per_s(self) -> float:
+        """Prompt tokens processed (prefill/chunk dispatches +
+        teacher-forced tail) over total dispatch time."""
+        done = self.prompt_tokens_prefilled + self.prompt_tokens_forced
+        return done / max(self.prefill_time_s + self.decode_time_s, 1e-9)
 
     def summary(self) -> str:
         return (
@@ -186,7 +207,8 @@ class EngineStats:
             f"in {self.decode_dispatches} decode dispatches "
             f"({self.occupancy():.0%} slot occupancy, "
             f"{self.slots_recycled} slots recycled, "
-            f"{self.tokens_per_s():.1f} tok/s)"
+            f"{self.tokens_per_s():.1f} gen tok/s, "
+            f"{self.prompt_tokens_per_s():.1f} prompt tok/s)"
         )
 
 
@@ -246,6 +268,7 @@ class Engine:
         self.max_batch = self.session.batch_size
         self.seq_len = self.session.seq_len
         self.max_len = self.session.max_len
+        self.paged = self.session.paged
         sampling = sampling if sampling is not None else Greedy()
         if getattr(sampling, "vocab", 0) is None:
             # bind an engine-local copy: a caller-shared policy must not be
@@ -262,6 +285,17 @@ class Engine:
         self._pos: list[int] = [0] * self.max_batch
         self._next_input: list[int] = [0] * self.max_batch
         self._used_slots: set[int] = set()
+        # paged chunked prefill: slot -> remaining chunk starts.  A slot
+        # in here is resident but NOT part of the decode lanes yet — its
+        # chunks interleave with the residents' batched decode dispatches.
+        self._chunks: dict[int, list[int]] = {}
+        # blocks an admitted-but-still-chunking prompt will still claim;
+        # admission subtracts these pledges from the free count so two
+        # long prompts cannot both be admitted into blocks only one of
+        # them can have (decode-phase growth stays unpledged: that path
+        # finishes the overflowing request via KVCapacityError, exactly
+        # like dense max_len)
+        self._pledged: dict[int, int] = {}
         self._next_rid = 0
 
     # -- submission --------------------------------------------------------
@@ -279,7 +313,8 @@ class Engine:
 
         ``prompt_tokens`` must be at least the compiled prompt length
         (``seq_len``) and at most the KV capacity (``max_len``); tokens
-        past ``seq_len`` are teacher-forced through batched decode.
+        past ``seq_len`` are teacher-forced through batched decode
+        (dense) or prefilled in ``seq_len``-sized chunks (paged).
         Generation stops at ``eos_id`` (recorded as the final token),
         after ``max_new_tokens``, or when the KV region fills.
         """
@@ -293,6 +328,13 @@ class Engine:
             raise ValueError(
                 f"prompt has {len(prompt)} tokens but the KV region holds "
                 f"max_len={self.max_len}; recompile with a larger max_len")
+        if self.paged:
+            need = blocks_for_rows(len(prompt), self.session.kv_block_size)
+            if need > self.session.kv_blocks:
+                raise ValueError(
+                    f"prompt needs {need} KV blocks but the pool holds "
+                    f"{self.session.kv_blocks} total; recompile with more "
+                    f"kv_blocks")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         handle = RequestHandle(self, self._next_rid, prompt, int(max_new_tokens),
@@ -337,39 +379,68 @@ class Engine:
     # -- scheduler loop ----------------------------------------------------
 
     def step(self) -> bool:
-        """One scheduler step: admit FIFO into free slots, then advance
-        every resident request by one token in a single batched decode
+        """One scheduler step: admit FIFO into free slots, advance one
+        prefill chunk per mid-chunking slot (paged), then advance every
+        decoding resident by one token in a single batched decode
         dispatch.  Returns False when the engine is idle."""
-        worked = self._admit()
-        active = [b for b, h in enumerate(self._slots) if h is not None]
+        admitted = self._admit()
+        worked = bool(admitted)
+        # freshly admitted slots already dispatched their first chunk in
+        # _admit — skipping them here keeps the promise of one chunk per
+        # slot per step (a resident decode's latency bubble is bounded by
+        # one chunk dispatch per mid-chunking neighbor)
+        worked = self._advance_chunks(skip=admitted) or worked
+
+        def decode_lanes():
+            return [b for b, h in enumerate(self._slots)
+                    if h is not None and b not in self._chunks]
+
+        active = decode_lanes()
         if not active:
             self._note_queue()
             return worked
 
         # capacity evictions re-dispatch within the same step: the error
-        # names exactly the slots past max_len, so only those requests
-        # finish (reason "kv_capacity") and the survivors still advance.
+        # names exactly the slots past max_len (or, paged, the slots the
+        # exhausted pool cannot grow), so only those requests finish
+        # (reason "kv_capacity") and the survivors still advance.
         while active:
             tokens = jnp.asarray(self._next_input, jnp.int32)
-            pos = jnp.asarray(self._pos, jnp.int32)
+            # pos stays host-side: the session's capacity checks and +1
+            # advance are numpy, so uploading a device array here would
+            # just be pulled straight back (one wasted round-trip/token)
+            pos = np.asarray(self._pos, np.int32)
             t0 = time.perf_counter()
             try:
-                logits = self.session.decode(tokens, pos)
+                if self.paged:
+                    mask = np.zeros((self.max_batch,), bool)
+                    mask[active] = True
+                    logits = self.session.decode(tokens, pos, active=mask)
+                else:
+                    logits = self.session.decode(tokens, pos)
             except KVCapacityError as e:
+                # the failed dispatch's wall time still counts: dropping
+                # it made long capacity-churny traces look faster than
+                # the wall clock (ISSUE 5)
+                self.stats.decode_time_s += time.perf_counter() - t0
                 for b in e.slots:
                     if self._slots[b] is not None:
                         self._finish(self._slots[b], "kv_capacity")
-                active = [b for b, h in enumerate(self._slots) if h is not None]
+                active = decode_lanes()
                 continue
             jax.block_until_ready(logits)
             self.stats.decode_time_s += time.perf_counter() - t0
             self.stats.decode_dispatches += 1
             self.stats.slot_steps_busy += len(active)
+            # ONE device->host fetch for the whole step: per-slot
+            # ``logits[b, -1]`` pulls used to round-trip once per resident
+            # request per token (ISSUE 5)
+            step_rows = jax.device_get(logits[:, -1])
             for b in active:
                 if self._slots[b] is None:
                     continue  # evicted mid-loop by a streaming callback
                 self._pos[b] += 1
-                self._consume_logits(b, logits[b, -1])
+                self._consume_logits(b, step_rows[b])
             break
         self._note_queue()
         return True
@@ -395,13 +466,32 @@ class Engine:
                                           self.stats.queue_depth)
         self.stats.slots_busy = self.slots_busy
 
-    def _admit(self) -> bool:
-        """FIFO admission: prefill queued requests into free slots."""
-        admitted = False
+    def _admit(self) -> set[int]:
+        """FIFO admission: prefill queued requests into free slots.
+        Returns the slot indices admitted this call.
+
+        Paged engines are pool-occupancy-aware: the head of the queue is
+        admitted only when the pool currently has blocks for its *whole*
+        prompt, so admissions do not immediately die of pool exhaustion
+        mid-chunk (resident decodes can still exhaust the pool later —
+        that path finishes the growing request with ``kv_capacity``).
+        FIFO is preserved: a too-big head blocks the queue until
+        completions free blocks, rather than being overtaken.
+        """
+        admitted: set[int] = set()
         while self._queue:
             free = next((b for b, h in enumerate(self._slots) if h is None), None)
             if free is None:
                 break
+            if self.paged:
+                need = blocks_for_rows(len(self._queue[0].prompt),
+                                       self.session.kv_block_size)
+                unclaimed = sum(
+                    max(0, pledge - self.session.blocks_held(b))
+                    for b, pledge in self._pledged.items()
+                )
+                if self.session.blocks_free - unclaimed < need:
+                    break
             handle = self._queue.popleft()
             handle.slot = free
             handle.status = RequestStatus.PREFILLING
@@ -409,16 +499,73 @@ class Engine:
             if free in self._used_slots:
                 self.stats.slots_recycled += 1
             self._used_slots.add(free)
-            head = jnp.asarray(handle.prompt[: self.seq_len], jnp.int32)[None]
-            t0 = time.perf_counter()
-            logits = self.session.prefill_slot(free, head)
-            jax.block_until_ready(logits)
-            self.stats.prefill_time_s += time.perf_counter() - t0
-            self.stats.prefill_dispatches += 1
-            self._pos[free] = self.seq_len
-            self._consume_logits(free, logits[0, -1])
-            admitted = True
+            if self.paged:
+                self._chunks[free] = chunk_starts(len(handle.prompt),
+                                                  self.seq_len)
+                self._pledged[free] = need
+                self._pos[free] = 0  # parked out of the decode lanes
+                self._dispatch_chunk(free)  # first chunk lands immediately
+            else:
+                head = jnp.asarray(handle.prompt[: self.seq_len], jnp.int32)[None]
+                t0 = time.perf_counter()
+                logits = self.session.prefill_slot(free, head)
+                jax.block_until_ready(logits)
+                self.stats.prefill_time_s += time.perf_counter() - t0
+                self.stats.prefill_dispatches += 1
+                self.stats.prompt_tokens_prefilled += self.seq_len
+                self._pos[free] = self.seq_len
+                self._consume_logits(free, jax.device_get(logits[0, -1]))
+            admitted.add(free)
         return admitted
+
+    def _advance_chunks(self, skip: set[int] = frozenset()) -> bool:
+        """Paged chunked prefill: one chunk dispatch per mid-chunking slot
+        per step, interleaved with the residents' batched decodes.
+        ``skip`` names slots that already dispatched a chunk this step
+        (fresh admissions)."""
+        progressed = False
+        for b in sorted(self._chunks):
+            if b in skip:
+                continue
+            if self._slots[b] is None:  # cancelled mid-chunking
+                self._chunks.pop(b, None)
+                continue
+            progressed = self._dispatch_chunk(b) or progressed
+        return progressed
+
+    def _dispatch_chunk(self, b: int) -> bool:
+        """Run slot ``b``'s next prefill chunk; on the final chunk the
+        request joins the decode lanes (first sampled token)."""
+        handle = self._slots[b]
+        starts = self._chunks[b]
+        start = starts.pop(0)
+        # tokens this chunk NEWLY covers: the pinned tail chunk overlaps
+        # the previous one, and crediting seq_len per dispatch would
+        # inflate prompt throughput for non-multiple prompt lengths
+        prev_rows = 0 if start == 0 else int(self.session.pos[b])
+        chunk = jnp.asarray(
+            handle.prompt[start : start + self.seq_len], jnp.int32)[None]
+        t0 = time.perf_counter()
+        try:
+            logits = self.session.prefill_chunk(b, chunk, start)
+            jax.block_until_ready(logits)
+        except KVCapacityError:
+            # requester-pays, like decode capacity: the pool cannot hold
+            # this prompt right now, so the growing request finishes
+            # (nothing generated) and its blocks go back to the pool
+            self.stats.prefill_time_s += time.perf_counter() - t0
+            self._finish(handle, "kv_capacity")
+            return True  # the finish IS scheduler progress
+        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.prefill_dispatches += 1
+        self.stats.prompt_tokens_prefilled += start + self.seq_len - prev_rows
+        if starts:
+            return True
+        del self._chunks[b]
+        self._pledged.pop(b, None)
+        self._pos[b] = len(handle.prompt)
+        self._consume_logits(b, jax.device_get(logits[0, -1]))
+        return True
 
     def _consume_logits(self, b: int, logits_row) -> None:
         """Turn slot ``b``'s fresh logits (predicting token index
@@ -455,8 +602,14 @@ class Engine:
         if handle.slot is not None:
             b, handle.slot = handle.slot, None
             self._slots[b] = None
+            self._chunks.pop(b, None)
+            self._pledged.pop(b, None)
             self._pos[b] = 0  # park the freed lane where it can never overflow
             self._next_input[b] = 0
+            if self.paged:
+                # pool-occupancy-aware eviction: the blocks return to the
+                # pool NOW, so survivors/queued requests can grow into them
+                self.session.free_slot(b)
         if status is RequestStatus.DONE:
             self.stats.requests_completed += 1
         else:

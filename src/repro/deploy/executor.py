@@ -201,10 +201,18 @@ def _run_node(node: PlanNode, env, table, backend):
         return fn(env[node.inputs[0]], scale=a["scale"])
     # decoder / KV-cache kinds
     if kind == "rope":
-        positions = (
-            env[node.inputs[1]] if len(node.inputs) > 1  # decode: runtime pos
-            else jnp.arange(a["dims"][0])  # prefill: static 0..S
-        )
+        rows = a["dims"][0]
+        if len(node.inputs) > 1:
+            pos = env[node.inputs[1]]  # decode / paged chunk: runtime pos
+            if rows > 1:
+                # paged prefill chunk: S absolute angles at the chunk's
+                # global offset (scalar pos — chunk dispatches past chunk 0
+                # run one request at a time; chunk 0 broadcasts offset 0)
+                positions = jnp.asarray(pos, jnp.int32).reshape(()) + jnp.arange(rows)
+            else:
+                positions = pos
+        else:
+            positions = jnp.arange(rows)  # prefill: static 0..S
         return fn(env[node.inputs[0]], positions, heads=a["heads"],
                   head_dim=a["head_dim"], theta=a["theta"])
     if kind == "attn_causal":
@@ -220,6 +228,16 @@ def _run_node(node: PlanNode, env, table, backend):
         pos = env[node.inputs[2]] if len(node.inputs) > 2 else None
         return fn(env[node.inputs[0]], cache, pos, kv_heads=a["kv_heads"],
                   head_dim=a["head_dim"], max_len=a["max_len"])
+    if kind == "attn_paged":
+        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
+                  env[node.inputs[3]], env[node.inputs[4]], heads=a["heads"],
+                  kv_heads=a["kv_heads"], head_dim=a["head_dim"],
+                  s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+    if kind == "cache_write_paged":
+        active = env[node.inputs[4]] if len(node.inputs) > 4 else None
+        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
+                  env[node.inputs[3]], active, kv_heads=a["kv_heads"],
+                  head_dim=a["head_dim"], block_size=a["block_size"])
     if kind == "silumul":
         return fn(env[node.inputs[0]], env[node.inputs[1]], scales=tuple(a["scales"]))
     if kind == "lasttok":
@@ -413,3 +431,81 @@ def execute_decode(
     outs_by_name = dict(zip(plan.outputs, outs))
     cache_out = _stack_cache(plan, outs_by_name, pos + 1)
     return outs_by_name[plan.outputs[0]], cache_out
+
+
+# ---------------------------------------------------------------------------
+# Paged decoder plans: pool-threading executors
+# ---------------------------------------------------------------------------
+
+def _stack_pool(plan: DeploymentPlan, outs_by_name: dict) -> dict:
+    """Per-layer pool outputs -> the session pool pytree
+    ``{"k": [L, P+1, Hkv, block_size, D] int8, "v": ...}`` (no batch dim:
+    the pool is shared across request slots by construction)."""
+    ks = [outs_by_name[out] for _, out in plan.kv_state[0::2]]
+    vs = [outs_by_name[out] for _, out in plan.kv_state[1::2]]
+    return {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+
+def _paged_batch(plan: DeploymentPlan, pool: dict, extra: dict) -> dict:
+    batch = dict(extra)
+    for i, (cin, _) in enumerate(plan.kv_state):
+        batch[cin] = pool["k" if i % 2 == 0 else "v"][i // 2]
+    return batch
+
+
+def execute_prefill_paged(
+    pair: DecoderPlanPair,
+    weights: dict,
+    pool: dict,
+    tokens,
+    start,
+    block_table,
+    *,
+    backend: Backend | str = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """Run one chunk of the paged prefill schedule.
+
+    ``tokens`` int32 [B, S] (S = the lowered prompt length), ``start``
+    the chunk's global token offset (scalar; 0 for the first chunk),
+    ``block_table`` int32 [B, blocks_per_slot].  Writes rows
+    ``[start, start + S)`` of each lane's logical cache through its block
+    table and returns ``(last-token logits, updated pool)``.
+    """
+    plan = pair.prefill
+    batch = _paged_batch(plan, pool, {
+        "tokens": tokens, "pos": start, "block_table": block_table,
+    })
+    outs = execute(plan, weights, batch, backend=backend, table=table)
+    outs_by_name = dict(zip(plan.outputs, outs))
+    return outs_by_name[plan.outputs[0]], _stack_pool(plan, outs_by_name)
+
+
+def execute_decode_paged(
+    pair: DecoderPlanPair,
+    weights: dict,
+    pool: dict,
+    token,
+    pos,
+    block_table,
+    active,
+    *,
+    backend: Backend | str = Backend.W8A8,
+    table: DispatchTable | None = None,
+):
+    """Advance one token per active lane through the paged decode schedule.
+
+    ``pos`` int32 [B] per-lane depths, ``block_table`` int32
+    [B, blocks_per_slot], ``active`` bool/int32 [B] — inactive lanes
+    (free slots, slots mid-chunked-prefill) dispatch anyway (the batch
+    shape is static) but their cache writes land in the scratch block and
+    their logits are discarded by the caller.
+    """
+    plan = pair.decode
+    batch = _paged_batch(plan, pool, {
+        "token": token, "pos": pos, "block_table": block_table,
+        "active": active,
+    })
+    outs = execute(plan, weights, batch, backend=backend, table=table)
+    outs_by_name = dict(zip(plan.outputs, outs))
+    return outs_by_name[plan.outputs[0]], _stack_pool(plan, outs_by_name)

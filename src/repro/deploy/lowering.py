@@ -190,6 +190,8 @@ def build_runtime_decoder_graph(
     *,
     phase: str = "prefill",
     max_len: int | None = None,
+    kv_block_size: int = 0,
+    kv_blocks: int = 0,
     s_act: float = _DEF_S_ACT,
     s_res: float = _DEF_S_RES,
     s_w: float = _DEF_S_W,
@@ -207,10 +209,22 @@ def build_runtime_decoder_graph(
     tensors in layer order, K before V, as ``(cache_in | None,
     cache_out)`` pairs — prefill creates the caches, decode consumes and
     in-place-updates them.
+
+    ``kv_blocks > 0`` lowers the **paged** variant: the per-slot cache
+    strips become shared block pools (``(kv_blocks + 1, Hkv,
+    kv_block_size, D)``; block 0 is scratch — :mod:`repro.deploy.paging`)
+    that are persistent, in-place-updated inputs of *both* phases, cache
+    maintenance/attention become block-table-driven ``CacheWritePaged`` /
+    ``AttnPaged`` nodes, and the prefill schedule gains a ``pos`` chunk
+    offset so the same static S-token schedule re-runs at offsets
+    ``0, S, 2S, ...`` (chunked prefill).  The decode schedule additionally
+    takes an ``active`` lane mask: inactive lanes of a batched dispatch
+    scatter into the scratch block instead of anyone's live rows.
     """
     assert phase in ("prefill", "decode"), phase
     if not (cfg.vocab and cfg.n_heads):
         raise NotImplementedError(f"decoder lowering needs a token LM; got {cfg.name}")
+    paged = kv_blocks > 0
     s = 1 if phase == "decode" else (seq_len or cfg.max_seq)
     cap = max_len or ((seq_len or cfg.max_seq) + 1)
     e, h, hkv, p, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
@@ -246,16 +260,32 @@ def build_runtime_decoder_graph(
     tok = g.add_tensor(tok_name, (s,), dtype="int32")
     g.inputs.append(tok)
     pos_in: list[str] = []
-    if phase == "decode":
+    if phase == "decode" or paged:
+        # decode: per-request depth; paged prefill: the chunk's global
+        # token offset (RoPE angles + cache-write rows are absolute)
         g.inputs.append(g.add_tensor("pos", (), dtype="int32"))
         pos_in = ["pos"]
+    paged_in: list[str] = []
+    if paged:
+        from repro.deploy.paging import blocks_per_slot
+
+        g.inputs.append(
+            g.add_tensor("block_table", (blocks_per_slot(cap, kv_block_size),),
+                         dtype="int32")
+        )
+        paged_in = ["pos", "block_table"]
+        if phase == "decode":
+            g.inputs.append(g.add_tensor("active", (), dtype="int32"))
+            paged_in.append("active")
     table = g.add_tensor("embed_table", (cfg.vocab_padded, e), weight=True)
     x = g.add_tensor("embed", (s, e))
     g.add_node("Embed", [table, tok], [x], dims=(s, e))
 
     # -- decoder stack
     kv_state: list[tuple[str | None, str]] = []
-    cache_shape = (hkv, cap, p)
+    cache_shape = (
+        (kv_blocks + 1, hkv, kv_block_size, p) if paged else (hkv, cap, p)
+    )
     for l in range(cfg.n_layers):
         pre = f"l{l}_"
         h1 = add_norm(x, pre + "norm1", pre + "ln1", s)
@@ -274,13 +304,27 @@ def build_runtime_decoder_graph(
 
         kname, vname = pre + "k_cache", pre + "v_cache"
         cache_attrs = dict(dims=cache_shape, kv_heads=hkv, head_dim=p, max_len=cap)
-        if phase == "prefill":
+        blk = PREFILL_BLOCK_K if phase == "prefill" else DECODE_BLOCK_K
+        if paged:
+            # shared block pools: persistent inputs, updated in place by a
+            # block-table scatter; attention gathers the slot's blocks
+            cache_attrs["block_size"] = kv_block_size
+            kin = g.add_tensor(kname + "_pool", cache_shape)
+            vin = g.add_tensor(vname + "_pool", cache_shape)
+            g.inputs += [kin, vin]
+            kc = g.add_tensor(kname + "_pool_new", cache_shape)
+            g.add_node("CacheWritePaged", [kr, kin] + paged_in, [kc], **cache_attrs)
+            vc = g.add_tensor(vname + "_pool_new", cache_shape)
+            g.add_node("CacheWritePaged", [vm, vin] + paged_in, [vc], **cache_attrs)
+            kv_state += [(kin, kc), (vin, vc)]
+            att_in, att_op = [qr, kc, vc, "pos", "block_table"], "AttnPaged"
+        elif phase == "prefill":
             kc = g.add_tensor(kname, cache_shape)
             g.add_node("CacheWrite", [kr], [kc], **cache_attrs)
             vc = g.add_tensor(vname, cache_shape)
             g.add_node("CacheWrite", [vm], [vc], **cache_attrs)
             kv_state += [(None, kc), (None, vc)]
-            att_in, att_op, blk = [qr, kr, vm], "AttnPrefill", PREFILL_BLOCK_K
+            att_in, att_op = [qr, kr, vm], "AttnPrefill"
         else:
             kin = g.add_tensor(kname, cache_shape)
             vin = g.add_tensor(vname, cache_shape)
@@ -290,7 +334,7 @@ def build_runtime_decoder_graph(
             vc = g.add_tensor(vname + "_new", cache_shape)
             g.add_node("CacheWrite", [vm, vin, "pos"], [vc], **cache_attrs)
             kv_state += [(kin, kc), (vin, vc)]
-            att_in, att_op, blk = [qr, kc, vc, "pos"], "AttnDecode", DECODE_BLOCK_K
+            att_in, att_op = [qr, kc, vc, "pos"], "AttnDecode"
 
         av = g.add_tensor(pre + "att", (s, h * p))
         g.add_node(att_op, att_in, [av], dims=(s, h * p), seq=s, heads=h,
@@ -386,6 +430,8 @@ def _emit_plan(
     phase: str = "forward",
     max_len: int = 0,
     kv_state: tuple = (),
+    kv_block_size: int = 0,
+    kv_blocks: int = 0,
     persistent: tuple = (),
     aliases: dict | None = None,
 ) -> DeploymentPlan:
@@ -439,6 +485,8 @@ def _emit_plan(
         phase=phase,
         max_len=max_len,
         kv_state=kv_state,
+        kv_block_size=kv_block_size,
+        kv_blocks=kv_blocks,
     ).validate()
 
 
@@ -447,6 +495,8 @@ def lower_decoder(
     seq_len: int | None = None,
     *,
     max_len: int | None = None,
+    kv_block_size: int = 0,
+    kv_blocks: int = 0,
     granule: int = ITA_GRANULE,
     budget: int = tiler.ITA_L1_BYTES,
     s_act: float = _DEF_S_ACT,
@@ -462,14 +512,24 @@ def lower_decoder(
     runs the same ``ita_supports`` predicate as the encoder flow — the
     prefill GEMMs accelerate, the decode-step M=1 GEMVs fall back to the
     cluster (``pad_m: False``, see ``patterns.node_opdesc``).
+
+    ``kv_blocks > 0`` plans the **paged** KV region instead: shared
+    block pools + per-slot block tables (see
+    :func:`build_runtime_decoder_graph` and :mod:`repro.deploy.paging`).
     """
     s = seq_len or cfg.max_seq
     cap = max_len or (s + 1)
+    if (kv_blocks > 0) != (kv_block_size > 0):
+        raise ValueError(
+            "paged lowering needs both kv_block_size and kv_blocks "
+            f"(got kv_block_size={kv_block_size}, kv_blocks={kv_blocks})"
+        )
     quant = {"s_act": s_act, "s_res": s_res, "s_w": s_w}
 
     def one(phase: str) -> DeploymentPlan:
         g, kv_state = build_runtime_decoder_graph(
-            cfg, s, phase=phase, max_len=cap, s_act=s_act, s_res=s_res, s_w=s_w
+            cfg, s, phase=phase, max_len=cap, kv_block_size=kv_block_size,
+            kv_blocks=kv_blocks, s_act=s_act, s_res=s_res, s_w=s_w
         )
         g = patterns.map_engines(g, granule)
         persistent = tuple(cin if cin is not None else cout for cin, cout in kv_state)
@@ -479,12 +539,14 @@ def lower_decoder(
             seq_len=s if phase == "prefill" else 1,
             granule=granule, budget=budget, quant=quant,
             phase=phase, max_len=cap, kv_state=tuple(kv_state),
+            kv_block_size=kv_block_size, kv_blocks=kv_blocks,
             persistent=persistent, aliases=aliases,
         )
 
     return DecoderPlanPair(
         arch=cfg.name, seq_len=s, max_len=cap,
         prefill=one("prefill"), decode=one("decode"),
+        kv_block_size=kv_block_size, kv_blocks=kv_blocks,
     ).validate()
 
 
@@ -495,6 +557,8 @@ def lower(
     head_by_head: bool = False,
     include_head: bool = True,
     max_len: int | None = None,
+    kv_block_size: int = 0,
+    kv_blocks: int = 0,
     granule: int = ITA_GRANULE,
     budget: int = tiler.ITA_L1_BYTES,
     s_act: float = _DEF_S_ACT,
@@ -506,7 +570,9 @@ def lower(
     Encoder family: a single forward :class:`DeploymentPlan`.  Decoder
     (dense) family: a :class:`DecoderPlanPair` — prefill + decode-step
     schedules linked through a shared static KV-cache region
-    (``max_len`` tokens of capacity).
+    (``max_len`` tokens of capacity), dense per-slot strips by default or
+    a shared paged block pool when ``kv_block_size``/``kv_blocks`` are
+    set.
     """
     if is_dense_decoder(cfg):
         if head_by_head or not include_head:
@@ -515,8 +581,14 @@ def lower(
                 "decoder pair always emits fused attention + an LM head"
             )
         return lower_decoder(
-            cfg, seq_len, max_len=max_len, granule=granule, budget=budget,
+            cfg, seq_len, max_len=max_len, kv_block_size=kv_block_size,
+            kv_blocks=kv_blocks, granule=granule, budget=budget,
             s_act=s_act, s_res=s_res, s_w=s_w,
+        )
+    if kv_blocks or kv_block_size:
+        raise ValueError(
+            "kv_block_size/kv_blocks configure the decoder KV region; "
+            f"{cfg.name} does not lower to a decoder plan pair"
         )
     if cfg.family != "encoder":
         detail = ""

@@ -23,6 +23,19 @@ small language models, arXiv 2408.04413):
 * **aliases** — the decode plan's ``cache_new`` outputs update the cache
   in place on the target; the planner maps an alias onto the exact
   allocation record of its source tensor (same offset, same size).
+
+Paged decoder plans (``kv_blocks > 0``) swap the per-slot cache strips
+for **pool-shaped persistent allocations**: one shared block pool per
+layer (``(kv_blocks + 1, Hkv, block_size, D)`` — scratch block included,
+see :mod:`repro.deploy.paging`) that is a persistent *input* of both the
+prefill and the decode schedule.  Because persistent tensors are stacked
+deterministically (sorted-name order from offset 0) and the two plans
+declare identical pool names and sizes, the pool offsets agree across
+the pair by construction — :func:`shared_persistent_offsets` is the
+planner-level check :meth:`DecoderPlanPair.validate` runs, and
+:func:`kv_pool_bytes` is the one definition of the pool's arena
+footprint (what the long-context benchmark compares against the dense
+``max_batch * max_len`` strips).
 """
 
 from __future__ import annotations
@@ -145,6 +158,51 @@ def plan_memory(
             allocs[out_name] = allocs[src]
     peak = max((a.offset + a.size for a in allocs.values()), default=0)
     return MemoryPlan(allocs, peak)
+
+
+def kv_pool_bytes(
+    kv_blocks: int,
+    block_size: int,
+    kv_heads: int,
+    head_dim: int,
+    n_layers: int,
+    *,
+    dtype_bytes: int = 1,
+) -> int:
+    """Static arena bytes of the paged KV region (K and V, all layers).
+
+    Counts the scratch block (physical block 0): it is part of the
+    allocation even though the allocator never hands it out.  The dense
+    equivalent is ``2 * n_layers * max_batch * kv_heads * max_len *
+    head_dim * dtype_bytes`` — the pool wins whenever ``(kv_blocks + 1) *
+    block_size < max_batch * max_len``.
+    """
+    from repro.deploy.paging import pool_rows
+
+    rows = pool_rows(kv_blocks, block_size)
+    return 2 * n_layers * kv_heads * rows * head_dim * dtype_bytes
+
+
+def shared_persistent_offsets(
+    a: "MemoryPlan | dict", b: "MemoryPlan | dict", names
+) -> list[str]:
+    """Names whose allocation (offset, size) DISAGREES between two plans.
+
+    The linked prefill/decode schedules literally share one static KV
+    region (dense strips or paged pools); an empty return is the
+    planner-level guarantee that the decode schedule runs against the
+    exact memory the prefill schedule wrote.
+    """
+    al = a.allocations if isinstance(a, MemoryPlan) else a
+    bl = b.allocations if isinstance(b, MemoryPlan) else b
+    bad = []
+    for t in names:
+        ra, rb = al.get(t), bl.get(t)
+        if ra is None or rb is None:
+            bad.append(t)
+        elif (ra.offset, ra.size) != (rb.offset, rb.size):
+            bad.append(t)
+    return bad
 
 
 def peak_lower_bound(g: Graph, persistent: tuple | set | frozenset = ()) -> int:

@@ -1,0 +1,144 @@
+"""Paged KV-cache bookkeeping: block pool geometry + the block allocator.
+
+The dense decoder artifact reserves ``max_len`` KV rows for *every*
+request slot — one long-context request inflates the whole batch's
+statically planned arena.  The paged artifact (``compile(cfg, ...,
+kv_block_size=, kv_blocks=)``) replaces the per-slot strips with one
+shared **block pool** per layer plus a per-slot **block table**: slot
+``b``'s logical cache row ``r`` lives at physical pool row
+``(table[b, r // block_size], r % block_size)``.  Capacity is then
+pooled: the compile-time budget is ``kv_blocks`` blocks *total*, not
+``max_batch * max_len`` rows, which is exactly the static cache
+management Deeploy applies to KV caches on MMU-less targets
+(arXiv 2408.04413) transplanted to the batched serving arena.
+
+This module owns the host-side arithmetic all layers share:
+
+* :class:`BlockAllocator` — the free list.  ``InferenceSession`` holds
+  one per paged session: blocks are allocated the moment a slot's depth
+  crosses into a new block (cache append / prefill chunk) and returned
+  when the slot is freed (request finished or evicted).  Physical block
+  0 is the **scratch block** — unallocated table entries point at it, so
+  parked/inactive lanes of a batched dispatch scatter harmlessly into
+  scratch instead of into anyone's live rows.
+* geometry helpers (:func:`blocks_per_slot`, :func:`blocks_for_rows`,
+  :func:`pool_rows`) — one definition of the table width / pool row
+  count used by the lowering, the memory planner, the session and the
+  benchmarks.
+* :func:`chunk_starts` — the chunked-prefill schedule: a prompt of ``T``
+  tokens runs the *static* ``S``-token prefill schedule at offsets
+  ``0, S, 2S, ...`` with a final chunk pinned to ``T - S`` (chunks may
+  overlap; re-writing a row with identical ints is bit-neutral because
+  every token's K/V is a pure function of its prefix), so any prompt
+  prefills in ``<= ceil(T / S)`` dispatches instead of ``T - S``
+  teacher-forced decode dispatches.
+"""
+
+from __future__ import annotations
+
+#: physical pool index of the scratch block (see module docstring).  The
+#: pool is allocated with ``kv_blocks + 1`` physical blocks; the
+#: allocator only ever hands out ids ``1 .. kv_blocks``.
+SCRATCH_BLOCK = 0
+
+
+def blocks_for_rows(rows: int, block_size: int) -> int:
+    """Blocks needed to hold cache rows ``[0, rows)``."""
+    return -(-rows // block_size)
+
+
+def blocks_per_slot(max_len: int, block_size: int) -> int:
+    """Block-table width: logical blocks covering one slot's ``max_len``."""
+    return blocks_for_rows(max_len, block_size)
+
+
+def pool_rows(kv_blocks: int, block_size: int) -> int:
+    """Physical pool rows per (layer, kv-head): scratch block included."""
+    return (kv_blocks + 1) * block_size
+
+
+def chunk_starts(prompt_len: int, seq_len: int) -> list[int]:
+    """Chunk offsets that cover a ``prompt_len`` prompt with the static
+    ``seq_len`` prefill schedule (final chunk pinned to the prompt tail).
+
+    ``len(result) <= ceil(prompt_len / seq_len)`` and every chunk is
+    exactly ``seq_len`` tokens — no padding, no teacher forcing.
+    """
+    if prompt_len < seq_len:
+        raise ValueError(
+            f"prompt of {prompt_len} tokens is shorter than the static "
+            f"prefill schedule seq_len={seq_len}"
+        )
+    starts = list(range(0, prompt_len - seq_len + 1, seq_len))
+    if starts[-1] != prompt_len - seq_len:
+        starts.append(prompt_len - seq_len)
+    return starts
+
+
+class PoolExhausted(Exception):
+    """Internal allocator signal: not enough free blocks for a request.
+
+    The session translates this into a structured
+    :class:`~repro.deploy.api.KVCapacityError` naming the slots that
+    could not grow (what the engine evicts) and the slots currently
+    holding blocks (the evictable candidates).
+    """
+
+    def __init__(self, requested: int, free: int):
+        self.requested = int(requested)
+        self.free = int(free)
+        super().__init__(f"requested {requested} KV blocks, {free} free")
+
+
+class BlockAllocator:
+    """Free-list allocator over the shared KV block pool.
+
+    Hands out physical block ids ``1 .. n_blocks`` (0 is the scratch
+    block).  Allocation order is deterministic — lowest free id first —
+    so identical request schedules produce identical block tables (and
+    hence bit-identical dispatch inputs) run after run.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"kv_blocks must be >= 1, got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        # min-heap behavior via sorted list popped from the front; sizes
+        # are small (a pool has tens to thousands of blocks)
+        self._free = list(range(1, self.n_blocks + 1))
+        self._owner: dict[int, int | None] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def owners(self) -> set:
+        """Distinct owners currently holding at least one block."""
+        return set(self._owner.values())
+
+    def allocate(self, n: int = 1, *, owner=None) -> list[int]:
+        """Take ``n`` blocks (all or nothing).  Raises :class:`PoolExhausted`
+        without mutating state when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise PoolExhausted(n, len(self._free))
+        taken, self._free = self._free[:n], self._free[n:]
+        for b in taken:
+            self._owner[b] = owner
+        return taken
+
+    def free(self, blocks) -> None:
+        """Return blocks to the pool (idempotence is a caller bug: freeing
+        an unowned or scratch id fails loudly)."""
+        for b in blocks:
+            b = int(b)
+            if b not in self._owner:
+                raise ValueError(f"block {b} is not allocated (double free?)")
+            del self._owner[b]
+            self._free.append(b)
+        self._free.sort()

@@ -35,7 +35,9 @@ KIND_BY_OP = {
     "Rope": "rope",
     "AttnPrefill": "attn_causal",
     "AttnDecode": "attn_cached",
+    "AttnPaged": "attn_paged",
     "CacheWrite": "cache_write",
+    "CacheWritePaged": "cache_write_paged",
     "SiluMul": "silumul",
     "LastTok": "lasttok",
     "LMHead": "lmhead",

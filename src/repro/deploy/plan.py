@@ -103,6 +103,18 @@ class DeploymentPlan:
     # prefill creates caches (in = None); decode updates them in place
     # (out aliases in at the same static offset).
     kv_state: tuple = ()
+    # paged KV region (0/0: dense per-slot strips).  When kv_blocks > 0
+    # the kv_state tensors are shared block *pools* — persistent inputs of
+    # BOTH phases, shaped (kv_blocks + 1, Hkv, kv_block_size, D) with
+    # physical block 0 reserved as scratch (see repro.deploy.paging) —
+    # and the schedule gains `pos`/`block_table` (+ `active` in decode)
+    # runtime inputs.
+    kv_block_size: int = 0
+    kv_blocks: int = 0
+
+    @property
+    def paged(self) -> bool:
+        return self.kv_blocks > 0
 
     # -- introspection -------------------------------------------------------
 
@@ -135,6 +147,20 @@ class DeploymentPlan:
                     f"in-place cache update {cin} -> {cout} not aliased "
                     f"({a.offset}/{a.size} vs {b.offset}/{b.size})"
                 )
+        if self.paged:
+            assert self.kv_block_size > 0, "paged plan without a block size"
+            from repro.deploy.paging import pool_rows
+
+            rows = pool_rows(self.kv_blocks, self.kv_block_size)
+            for cin, cout in self.kv_state:
+                assert cin is not None, (
+                    f"paged pool {cout} must be a persistent plan input"
+                )
+                shape = self.tensors[cin].shape
+                assert shape[0] * shape[2] == rows, (
+                    f"pool {cin} shape {shape} does not hold "
+                    f"(kv_blocks + 1) * block_size = {rows} rows"
+                )
         return self
 
     # -- serialization -------------------------------------------------------
@@ -156,6 +182,8 @@ class DeploymentPlan:
             "phase": self.phase,
             "max_len": self.max_len,
             "kv_state": [list(p) for p in self.kv_state],
+            "kv_block_size": self.kv_block_size,
+            "kv_blocks": self.kv_blocks,
         }
 
     @staticmethod
@@ -176,6 +204,8 @@ class DeploymentPlan:
             phase=d.get("phase", "forward"),
             max_len=int(d.get("max_len", 0)),
             kv_state=tuple((cin, cout) for cin, cout in d.get("kv_state", ())),
+            kv_block_size=int(d.get("kv_block_size", 0)),
+            kv_blocks=int(d.get("kv_blocks", 0)),
         ).validate()
 
     def to_json(self, indent: int | None = None) -> str:
@@ -213,29 +243,62 @@ class DecoderPlanPair:
     max_len: int  # KV-cache capacity in tokens
     prefill: DeploymentPlan
     decode: DeploymentPlan
+    # paged KV region (0/0 = dense): mirrored from the member plans so the
+    # pair is self-describing without poking into a phase.
+    kv_block_size: int = 0
+    kv_blocks: int = 0
+
+    @property
+    def paged(self) -> bool:
+        return self.kv_blocks > 0
 
     @property
     def kv_tensors(self) -> tuple[str, ...]:
-        """Names of the shared persistent cache tensors, layer order."""
+        """Names of the shared persistent cache tensors, layer order.
+
+        Dense: the prefill-produced per-slot strips.  Paged: the pool
+        inputs both phases update in place.
+        """
+        if self.paged:
+            return tuple(cin for cin, _ in self.prefill.kv_state)
         return tuple(out for _, out in self.prefill.kv_state)
 
     def counts(self) -> dict[str, dict[str, int]]:
         return {"prefill": self.prefill.counts(), "decode": self.decode.counts()}
 
     def validate(self) -> "DecoderPlanPair":
+        from repro.deploy.memory import shared_persistent_offsets
+
         self.prefill.validate()
         self.decode.validate()
         assert self.prefill.phase == "prefill" and self.decode.phase == "decode"
         assert self.prefill.max_len == self.decode.max_len == self.max_len
-        dec_in = {cin: cout for cin, cout in self.decode.kv_state}
-        for _, name in self.prefill.kv_state:
-            assert name in dec_in, f"prefill cache {name} not consumed by decode plan"
+        assert (self.prefill.kv_block_size, self.prefill.kv_blocks) == (
+            self.decode.kv_block_size, self.decode.kv_blocks
+        ) == (self.kv_block_size, self.kv_blocks), "paging config desync"
+        if self.paged:
+            # both phases consume + in-place-update the SAME pools
+            pre_in = tuple(cin for cin, _ in self.prefill.kv_state)
+            dec_in = tuple(cin for cin, _ in self.decode.kv_state)
+            assert pre_in == dec_in, (pre_in, dec_in)
+            shared = pre_in
+        else:
+            dec_by_in = {cin for cin, _ in self.decode.kv_state}
+            for _, name in self.prefill.kv_state:
+                assert name in dec_by_in, (
+                    f"prefill cache {name} not consumed by decode plan"
+                )
+            shared = tuple(out for _, out in self.prefill.kv_state)
+        for name in shared:
             a, b = self.prefill.tensors[name], self.decode.tensors[name]
             assert a.shape == b.shape, (name, a.shape, b.shape)
-            assert a.offset == b.offset and a.size == b.size, (
-                f"KV region desync for {name}: prefill {a.offset}/{a.size}, "
-                f"decode {b.offset}/{b.size}"
-            )
+        bad = shared_persistent_offsets(
+            self.prefill.tensors, self.decode.tensors, shared
+        )
+        assert not bad, (
+            f"KV region desync: {bad} allocated at different offsets in "
+            f"the prefill vs decode schedule"
+        )
         return self
 
     # -- serialization -------------------------------------------------------
@@ -247,6 +310,8 @@ class DecoderPlanPair:
             "max_len": self.max_len,
             "prefill": self.prefill.to_dict(),
             "decode": self.decode.to_dict(),
+            "kv_block_size": self.kv_block_size,
+            "kv_blocks": self.kv_blocks,
         }
 
     @staticmethod
@@ -257,6 +322,8 @@ class DecoderPlanPair:
             max_len=int(d["max_len"]),
             prefill=DeploymentPlan.from_dict(d["prefill"]),
             decode=DeploymentPlan.from_dict(d["decode"]),
+            kv_block_size=int(d.get("kv_block_size", 0)),
+            kv_blocks=int(d.get("kv_blocks", 0)),
         ).validate()
 
     def to_json(self, indent: int | None = None) -> str:

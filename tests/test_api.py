@@ -467,3 +467,57 @@ class TestFingerprint:
         assert fp1 == fp2 and len(fp1) == 64
         blob = json.dumps({"config": dataclasses.asdict(cfg)}, sort_keys=True)
         assert isinstance(blob, str)  # config is JSON-serializable by design
+
+    def test_identical_in_a_fresh_process(self, olmo):
+        """ISSUE 5 regression: the old ``json.dumps(default=repr)``
+        fallback could embed object identity (``<... at 0x7f...>``) and
+        fingerprint differently every process — a permanent cache miss
+        nobody notices.  A subprocess must now reproduce the hash."""
+        import os
+        import subprocess
+        import sys
+
+        import repro
+
+        cfg, _ = olmo
+        opts = {"backend": "w8a8", "granule": 64, "seq_len": SEQ}
+        here = api.config_fingerprint(cfg, opts)
+        prog = (
+            "from repro.configs import get_config, reduced\n"
+            "from repro.deploy import api\n"
+            "cfg = reduced(get_config('olmo-1b'))\n"
+            f"print(api.config_fingerprint(cfg, {opts!r}))\n"
+        )
+        env = dict(os.environ)
+        # repro is a namespace package (no __init__.py): locate via __path__
+        env["PYTHONPATH"] = os.path.dirname(list(repro.__path__)[0])
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            check=True, env=env,
+        )
+        assert out.stdout.strip() == here
+
+    def test_non_json_stable_values_fail_loudly(self, olmo):
+        """Anything whose serialization would depend on object identity
+        raises TypeError instead of silently keying the cache on it."""
+        cfg, _ = olmo
+
+        class Opaque:
+            pass
+
+        with pytest.raises(TypeError, match="not JSON-stable"):
+            api.config_fingerprint(cfg, {"table": Opaque()})
+        with pytest.raises(TypeError, match="not JSON-stable"):
+            api.config_fingerprint(cfg, {"fn": lambda x: x})
+        with pytest.raises(TypeError, match="non-finite"):
+            api.config_fingerprint(cfg, {"scale": float("nan")})
+        with pytest.raises(TypeError, match="key"):
+            api.config_fingerprint(cfg, {"deep": {1: "non-str-key"}})
+        # tuples/lists/dicts of scalars stay fingerprintable
+        fp = api.config_fingerprint(cfg, {"shape": (1, 2), "f": 0.5,
+                                          "flag": True, "none": None})
+        assert len(fp) == 64
+        # and a tuple fingerprints like its list form (JSON normal form)
+        assert fp == api.config_fingerprint(cfg, {"shape": [1, 2], "f": 0.5,
+                                                  "flag": True, "none": None})

@@ -151,6 +151,160 @@ class TestRequantizeProperties:
         assert got == (x + (1 << (s - 1))) >> s
 
 
+class TestBlockAllocatorProperties:
+    @given(
+        n_blocks=st.integers(1, 24),
+        ops=st.lists(
+            st.tuples(st.integers(0, 5), st.integers(0, 3), st.booleans()),
+            max_size=40,
+        ),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_no_block_owned_twice_and_frees_return(self, n_blocks, ops):
+        """Random allocate/free traffic from interleaved owners: no
+        physical block is ever owned by two live slots, the scratch block
+        is never issued, failed allocations mutate nothing, and freed
+        blocks genuinely return to the pool."""
+        from repro.deploy.paging import (
+            SCRATCH_BLOCK,
+            BlockAllocator,
+            PoolExhausted,
+        )
+
+        alloc = BlockAllocator(n_blocks)
+        held: dict[int, list[int]] = {}
+        for owner, n, do_free in ops:
+            if do_free and held.get(owner):
+                alloc.free(held.pop(owner))
+            else:
+                before = alloc.n_free
+                try:
+                    got = alloc.allocate(n, owner=owner)
+                except PoolExhausted:
+                    assert alloc.n_free == before  # all-or-nothing
+                    continue
+                held.setdefault(owner, []).extend(got)
+            live = [b for blocks in held.values() for b in blocks]
+            assert len(live) == len(set(live))  # no double ownership
+            assert SCRATCH_BLOCK not in live
+            assert all(1 <= b <= n_blocks for b in live)
+            assert alloc.n_free + len(live) == n_blocks  # conservation
+        for blocks in held.values():
+            alloc.free(blocks)
+        assert alloc.n_free == n_blocks  # everything returned
+
+
+class TestPagedPlanProperties:
+    @given(
+        seq=st.sampled_from([4, 8]),
+        block=st.sampled_from([2, 4, 8]),
+        blocks=st.integers(2, 9),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_property_pool_offsets_identical_across_pair(self, seq, block, blocks):
+        """Any paged geometry: the prefill and decode schedules allocate
+        every pool tensor at the same static offset/size (the linked
+        plans literally share one region), and validate() holds."""
+        from repro.configs import get_config, reduced
+        from repro.deploy.lowering import lower_decoder
+
+        cfg = reduced(get_config("olmo-1b"))
+        pair = lower_decoder(cfg, seq, max_len=seq + block * 2,
+                             kv_block_size=block, kv_blocks=blocks)
+        assert pair.paged
+        names = pair.kv_tensors
+        assert names  # pools exist
+        assert not memory.shared_persistent_offsets(
+            pair.prefill.tensors, pair.decode.tensors, names
+        )
+        # pools are stacked contiguously from offset 0 (sorted-name order)
+        offsets = sorted(pair.prefill.tensors[n].offset for n in names)
+        assert offsets[0] == 0
+
+    @given(
+        depths=st.lists(st.integers(0, 11), min_size=2, max_size=3),
+        seed=st.integers(0, 500),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_paged_runners_bit_exact_vs_dense(self, depths, seed):
+        """Random per-slot depths and block tables: the paged
+        ``cache_write`` + ``attn_cached`` runner pair computes exactly
+        the dense runners' ints (the block-table gather is a layout
+        change, not an arithmetic one)."""
+        import jax
+
+        from repro.core.heterogeneous import DEFAULT_TABLE, Backend, Engine, OpDesc
+        from repro.deploy.paging import SCRATCH_BLOCK
+
+        hkv, heads, d, block, max_len = 2, 4, 8, 4, 12
+        b = len(depths)
+        rng = np.random.default_rng(seed)
+
+        def rand8(*shape):
+            return jnp.asarray(rng.integers(-128, 128, shape), jnp.int8)
+
+        def cluster(kind):
+            return DEFAULT_TABLE._lookup(kind, Engine.CLUSTER, Backend.W8A8)
+
+        # dense cache with each slot's first `depth` rows populated
+        dense_k = np.zeros((b, hkv, max_len, d), np.int8)
+        dense_v = np.zeros((b, hkv, max_len, d), np.int8)
+        nblk = max_len // block
+        pool_k = np.zeros((b * nblk + 1, hkv, block, d), np.int8)
+        pool_v = np.zeros_like(pool_k)
+        table = np.full((b, nblk), SCRATCH_BLOCK, np.int32)
+        next_free = 1
+        for i, depth in enumerate(depths):
+            rows_k = rng.integers(-128, 128, (hkv, depth, d))
+            rows_v = rng.integers(-128, 128, (hkv, depth, d))
+            dense_k[i, :, :depth] = rows_k
+            dense_v[i, :, :depth] = rows_v
+            # blocks cover the append target row `depth` too — the session
+            # allocates the crossed-into block before dispatching
+            for blk_i in range(-(-(depth + 1) // block)):
+                table[i, blk_i] = next_free
+                lo = blk_i * block
+                pool_k[next_free, :, : max(0, min(depth - lo, block))] = (
+                    rows_k[:, lo : lo + block])
+                pool_v[next_free, :, : max(0, min(depth - lo, block))] = (
+                    rows_v[:, lo : lo + block])
+                next_free += 1
+
+        pos = jnp.asarray(depths, jnp.int32)
+        kv_new = rand8(b, 1, hkv * d)
+        q_new = rand8(b, 1, heads * d)
+
+        # cache_write: dense row-append vs paged block scatter
+        dk = cluster("cache_write")(kv_new, jnp.asarray(dense_k), pos,
+                                    kv_heads=hkv, head_dim=d, max_len=max_len)
+        pk = cluster("cache_write_paged")(kv_new, jnp.asarray(pool_k), pos,
+                                          jnp.asarray(table), None,
+                                          kv_heads=hkv, head_dim=d,
+                                          block_size=block)
+        # compare through each slot's logical view (gather its blocks)
+        gathered = np.asarray(pk)[table].transpose(0, 2, 1, 3, 4).reshape(
+            b, hkv, max_len, d)
+        for i, depth in enumerate(depths):
+            np.testing.assert_array_equal(
+                np.asarray(dk)[i, :, : depth + 1], gathered[i, :, : depth + 1])
+
+        # attn: dense cache-masked vs paged gathered, same ints
+        dv = cluster("cache_write")(kv_new, jnp.asarray(dense_v), pos,
+                                    kv_heads=hkv, head_dim=d, max_len=max_len)
+        pv = cluster("cache_write_paged")(kv_new, jnp.asarray(pool_v), pos,
+                                          jnp.asarray(table), None,
+                                          kv_heads=hkv, head_dim=d,
+                                          block_size=block)
+        dense_out = cluster("attn_cached")(
+            q_new, dk, dv, pos, heads=heads, head_dim=d,
+            s_act=0.05, s_out=0.05, block_k=2048)
+        paged_out = cluster("attn_paged")(
+            q_new, pk, pv, pos, jnp.asarray(table), heads=heads,
+            kv_heads=hkv, head_dim=d, s_act=0.05, s_out=0.05, block_k=2048)
+        np.testing.assert_array_equal(np.asarray(dense_out),
+                                      np.asarray(paged_out))
+
+
 class TestItamaxProperties:
     @given(data=st.data())
     @settings(max_examples=30, deadline=None)
