@@ -64,21 +64,26 @@ def main(argv=None):
                         max_len=args.prompt_len + args.gen + 1)
     prompts = synthesize_prompts(cfg.vocab, n=n, prompt_len=args.prompt_len)
 
-    print("mode,max_batch,requests,tokens,decode_dispatches,occupancy,tok_per_s")
+    print("mode,max_batch,requests,tokens,decode_dispatches,"
+          "dispatches_per_step,step_p50_ms,step_p99_ms,occupancy,tok_per_s")
     rows = {}
     for mode, mb in (("serial", 1), ("continuous", args.batch)):
         stats, _ = _run_trace(model, prompts, max_batch=mb, gen=args.gen,
                               sampling=make_sampling(args))
         rows[mode] = stats
         print(f"{mode},{mb},{n},{stats.tokens_generated},"
-              f"{stats.decode_dispatches},{stats.occupancy():.2f},"
-              f"{stats.tokens_per_s():.1f}")
+              f"{stats.decode_dispatches},{stats.dispatches_per_step},"
+              f"{stats.step_latency_p50() * 1e3:.2f},"
+              f"{stats.step_latency_p99() * 1e3:.2f},"
+              f"{stats.occupancy():.2f},{stats.tokens_per_s():.1f}")
     serial, cont = rows["serial"], rows["continuous"]
     speedup = cont.tokens_per_s() / max(serial.tokens_per_s(), 1e-9)
     dispatch_ratio = serial.decode_dispatches / max(cont.decode_dispatches, 1)
     print(f"# continuous batching: {speedup:.2f}x tok/s over serial "
           f"({dispatch_ratio:.1f}x fewer decode dispatches, "
-          f"{cont.slots_recycled} slots recycled)")
+          f"{cont.slots_recycled} slots recycled); plan runs "
+          f"{cont.dispatches_per_step} dispatches/step (region fusion; "
+          f"compile(fuse=False) to compare unfused)")
 
 
 if __name__ == "__main__":

@@ -11,21 +11,29 @@ so the chip count cancels), plus MODEL_FLOPS / HLO_FLOPs (useful-compute
 ratio: catches remat and dispatch redundancy).  Emits CSV + a markdown
 table for EXPERIMENTS.md.
 
-TPU v5e constants (per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
-~50 GB/s/link ICI.
+Hardware corners come from :mod:`repro.deploy.costmodel` (``HwTarget``) —
+ONE source of truth shared with the calibrated analytical model, so
+``table1_e2e`` predicted-vs-measured and this roofline can never use
+drifting constants.  ``--hw tpu`` (default) is the TPU v5e corner
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI); ``--hw ita`` is the
+Snitch+ITA corner derived from the calibrated HwConfig (870.4 GOp/s
+int8, DMA-sustained L2 bandwidth, no interconnect).
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 
 from repro.configs import ALL_SHAPES, get_config
+from repro.deploy.costmodel import TPU_V5E, HwTarget, hw_target
 
-PEAK_FLOPS = 197e12  # bf16 per chip (int8 MXU would be 2x — noted in report)
-HBM_BW = 819e9
-ICI_BW = 50e9
+# module-level back-compat aliases (the TPU corner); prefer hw_target()
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
 CHIPS = 256  # single-pod roofline table
 
 
@@ -86,14 +94,16 @@ def load_records(dry_dir: str = "experiments/dryrun", mesh: str = "16x16") -> li
     return recs
 
 
-def roofline_row(rec: dict) -> dict | None:
+def roofline_row(rec: dict, hw: HwTarget = TPU_V5E) -> dict | None:
     if rec.get("status") != "ok":
         return None
     cfg = get_config(rec["arch"])
     cell = next(c for c in ALL_SHAPES if c.name == rec["shape"])
-    t_comp = rec["flops"] / PEAK_FLOPS
-    t_mem = rec["mem_bytes"] / HBM_BW
-    t_coll = rec["collectives"]["total_bytes"] / ICI_BW
+    t_comp = rec["flops"] / hw.peak_flops
+    t_mem = rec["mem_bytes"] / hw.hbm_bw
+    # a single-device target (ici_bw == 0) has no collective term
+    coll_bytes = rec["collectives"]["total_bytes"]
+    t_coll = coll_bytes / hw.ici_bw if hw.ici_bw else 0.0
     terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dom = max(terms, key=terms.get)
     mf = model_flops(cfg, cell)
@@ -101,6 +111,7 @@ def roofline_row(rec: dict) -> dict | None:
         "arch": rec["arch"],
         "shape": rec["shape"],
         "kind": rec.get("kind", ""),
+        "hw": hw.name,
         "t_compute_s": t_comp,
         "t_memory_s": t_mem,
         "t_collective_s": t_coll,
@@ -111,10 +122,11 @@ def roofline_row(rec: dict) -> dict | None:
     }
 
 
-def summarize(dry_dir: str = "experiments/dryrun", mesh: str = "16x16"):
+def summarize(dry_dir: str = "experiments/dryrun", mesh: str = "16x16",
+              hw: HwTarget = TPU_V5E):
     rows = []
     for rec in load_records(dry_dir, mesh):
-        r = roofline_row(rec)
+        r = roofline_row(rec, hw)
         if r:
             rows.append(r)
     return rows
@@ -135,20 +147,26 @@ def to_markdown(rows) -> str:
     return hdr + "\n".join(lines)
 
 
-def main():
-    rows = summarize()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hw", choices=("tpu", "ita"), default="tpu",
+                    help="roofline corner (from repro.deploy.costmodel)")
+    args = ap.parse_args(argv)
+    hw = hw_target(args.hw)
+    rows = summarize(hw=hw)
     if not rows:
         print("no dry-run records found — run repro.launch.dryrun first")
         return []
-    print("arch,shape,t_compute,t_memory,t_collective,bottleneck,useful_ratio,roofline_frac")
+    print("arch,shape,hw,t_compute,t_memory,t_collective,bottleneck,useful_ratio,roofline_frac")
     for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
         print(
-            f"{r['arch']},{r['shape']},{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
+            f"{r['arch']},{r['shape']},{r['hw']},{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
             f"{r['t_collective_s']:.4e},{r['bottleneck']},{r['useful_ratio']:.3f},"
             f"{r['roofline_fraction']:.3f}"
         )
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/roofline.md", "w") as f:
+    suffix = "" if hw.name == "tpu" else f"_{hw.name}"
+    with open(f"experiments/roofline{suffix}.md", "w") as f:
         f.write(to_markdown(rows) + "\n")
     return rows
 

@@ -5,6 +5,8 @@
   table1_e2e            paper Table I (E2E networks, Multi-Core vs +ITA)
   comparison_sota       paper §V-C commercial-device comparison
   roofline              §Roofline terms from the dry-run artifacts
+  decode_latency        per-step decode latency, fused mega-kernel
+                        regions vs unfused, dense vs paged KV
   engine_throughput     request-level serving engine: continuous
                         batching vs serial on the compiled artifact
   long_context          paged KV block pool + chunked prefill vs the
@@ -43,7 +45,12 @@ def main() -> None:
     _section("roofline (dry-run artifacts)")
     from benchmarks import roofline
 
-    roofline.main()
+    roofline.main([])
+
+    _section("decode_latency (fused vs unfused decode step)")
+    from benchmarks import decode_latency
+
+    decode_latency.main(["--smoke"])
 
     _section("engine_throughput (continuous batching vs serial)")
     from benchmarks import engine_throughput

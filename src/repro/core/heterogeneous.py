@@ -368,7 +368,16 @@ def populate_default_table(table: DispatchTable | None = None) -> DispatchTable:
         return x_q.transpose(0, 2, 1, 3).reshape(b, s, h * d)
 
     def _rope(x_q, positions, *, heads, head_dim, theta):
-        positions = jnp.asarray(positions).reshape(-1)
+        positions = jnp.asarray(positions)
+        if positions.ndim == 2:
+            # per-lane window positions [B, S] (batched prefill chunks):
+            # tables [B, S, D/2] -> [B, 1, S, D/2] broadcast over heads.
+            # Each lane's rows see exactly the angles the single-lane
+            # dispatch would (the tables are elementwise in position).
+            c_q, s_q = L.rope_tables_i8(positions, head_dim, theta)
+            return _merge(L.apply_rope_i8(_split(x_q, heads, head_dim),
+                                          c_q[:, None], s_q[:, None]))
+        positions = positions.reshape(-1)
         c_q, s_q = L.rope_tables_i8(positions, head_dim, theta)
         if x_q.shape[1] == 1 and positions.shape[0] == x_q.shape[0]:
             # per-request decode positions: row b rotates by its own angle

@@ -71,7 +71,11 @@ from repro.deploy.plan import DecoderPlanPair, DeploymentPlan
 #: *semantics*.  Cached plans from other versions are recompiled.
 #: v4: paged KV region (kv_block_size/kv_blocks options, pool-shaped
 #: cache tensors) + strict fingerprint canonicalization.
-COMPILER_VERSION = 4
+#: v5: FusedRegion mega-nodes (region-fusion pass, ``fuse`` option) +
+#: cost-model autotuning (``autotune`` option folds the tuned knobs —
+#: kv_block_size, fusion boundary, GEMM macro-tiles — into the
+#: fingerprint and records them in the plan's ``autotune`` payload).
+COMPILER_VERSION = 5
 
 _PAYLOAD_FORMAT = "repro.deploy.api/compiled-model"
 
@@ -370,6 +374,8 @@ def compile(  # noqa: A001 — torch.compile precedent
     kv_blocks: int | None = None,
     head_by_head: bool = False,
     include_head: bool = True,
+    fuse: bool = True,
+    autotune: bool = False,
     cache_dir: str | None = None,
     use_cache: bool = True,
 ) -> CompiledModel:
@@ -387,6 +393,23 @@ def compile(  # noqa: A001 — torch.compile precedent
     slots, so long-context capacity is pooled instead of reserved
     worst-case per slot, and prompts beyond ``seq_len`` prefill in
     chunks (see DEPLOY.md "Paged KV region").
+
+    ``fuse=True`` (the default; decoder family only — encoder plans
+    always lower unfused) runs the region-fusion pass: contiguous
+    same-engine schedule runs collapse into ``FusedRegion`` mega-nodes
+    the executor dispatches as single jitted closures — bit-exact vs the
+    unfused plans (tested both backends, dense and paged).  Pass
+    ``fuse=False`` to force unfused plans (per-node dispatch, e.g. for
+    per-operator debugging/tracing).
+
+    ``autotune=True`` (decoder only) runs the cost-model-driven tuner
+    (:mod:`repro.deploy.autotune`) over the bit-neutral plan knobs —
+    ``kv_block_size`` (pool rows preserved), the fusion boundary, and
+    the GEMM macro-tiles — picks the predicted-cost argmin, records the
+    chosen knobs + predicted step cost in the plan's ``autotune``
+    payload, and folds them into the fingerprint, so autotuned plans
+    ride the same on-disk cache (the tuner is deterministic: a second
+    ``compile(autotune=True)`` re-derives identical knobs and hits).
 
     Cache semantics: the key is ``config_fingerprint(cfg, options)`` —
     the *full* config plus every resolved lowering option (backend
@@ -413,16 +436,43 @@ def compile(  # noqa: A001 — torch.compile precedent
             f"kv_block_size/kv_blocks must both be positive, got "
             f"{kv_block_size}/{kv_blocks}"
         )
+    # fusion targets the decode hot path; encoder artifacts ignore it so
+    # the fused-by-default surface stays family-agnostic
+    fuse = bool(fuse) and is_decoder
+    if autotune and not is_decoder:
+        raise ValueError(
+            "autotune enumerates decode-step knobs (kv_block_size, fusion "
+            f"boundary, decode GEMM tiles); {cfg.name} does not lower to a "
+            "decoder plan pair"
+        )
+    cap = (max_len or s + 1) if is_decoder else 0
+    tuned = None
+    fuse_min_nodes = 2
+    if autotune:
+        from repro.deploy.autotune import tune_decoder
+
+        tuned = tune_decoder(
+            cfg, seq_len=s, max_len=cap, granule=granule,
+            kv_block_size=bs, kv_blocks=nb, fuse=fuse,
+        )
+        bs = tuned.knobs["kv_block_size"]
+        nb = tuned.knobs["kv_blocks"]
+        fuse_min_nodes = tuned.knobs["fuse_min_nodes"]
     options = {
         "backend": be.value,
         "granule": granule,
         "seq_len": s,
-        "max_len": (max_len or s + 1) if is_decoder else 0,
+        "max_len": cap,
         "kv_block_size": bs,
         "kv_blocks": nb,
         "head_by_head": head_by_head,
         "include_head": include_head,
+        "fuse": fuse,
     }
+    if autotune:
+        # the *resolved* knobs key the cache: same (config, options) ->
+        # same deterministic tuner outcome -> same fingerprint -> hit
+        options["autotune"] = dict(tuned.knobs)
     fingerprint = config_fingerprint(cfg, options)
     cache_dir = cache_dir or default_cache_dir()
     path = _cache_path(cache_dir, cfg, fingerprint)
@@ -438,7 +488,10 @@ def compile(  # noqa: A001 — torch.compile precedent
     artifact = lower(
         cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
         max_len=max_len, kv_block_size=bs, kv_blocks=nb, granule=granule,
+        fuse=fuse, fuse_min_nodes=fuse_min_nodes,
     )
+    if tuned is not None:
+        artifact.decode.autotune = tuned.payload()
     model = CompiledModel(
         cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
         cache_path=path if use_cache else None,
@@ -588,6 +641,16 @@ class InferenceSession:
     def kv_blocks(self) -> int:
         self._require("decoder", "kv_blocks")
         return self._pair.kv_blocks
+
+    @property
+    def decode_dispatch_count(self) -> int:
+        """Top-level dispatches per decode step — ``len(decode.nodes)``.
+
+        Fused plans collapse same-engine runs into single FusedRegion
+        dispatches, so this is the metric the fusion pass moves (the
+        engine reports it as ``EngineStats.dispatches_per_step``)."""
+        self._require("decoder", "decode_dispatch_count")
+        return len(self._pair.decode.nodes)
 
     @property
     def blocks_free(self) -> int:
@@ -764,6 +827,84 @@ class InferenceSession:
             jnp.asarray(self._tables[slot : slot + 1]),
         )
         self._pos[slot] = start + s
+        return logits
+
+    def prefill_chunks(self, chunks: dict):
+        """Batched chunked prefill: ONE multi-slot dispatch (paged only).
+
+        ``chunks`` maps ``slot -> (tokens, start)`` — the same per-slot
+        arguments :meth:`prefill_chunk` takes.  Every named slot's chunk
+        runs in a single full-batch dispatch of the static prefill
+        schedule (``pos`` becomes a per-lane offset vector), instead of
+        one dispatch per mid-chunking slot per scheduler step — the
+        engine's chunked-prefill hot-path fix.  Lanes *not* named in
+        ``chunks`` are parked on all-scratch block tables, so their
+        placeholder computation scatters into the scratch block and
+        cannot touch any live slot's cache rows; their logits rows are
+        garbage for the caller to ignore.
+
+        All per-slot validation, block release (``start == 0``) and
+        pool growth happen host-side BEFORE the dispatch — a
+        :class:`KVCapacityError` leaves device state untouched, so the
+        scheduler can evict the named slot and retry the survivors.
+        Bit-exactness per lane vs the single-slot path is row-local
+        (tested).
+
+        Returns the batch's last-token logits [batch_size, 1,
+        vocab_padded]; row ``b`` is meaningful only for ``b in chunks``.
+        """
+        self._require("decoder", "prefill_chunks")
+        if not self._pair.paged:
+            raise RuntimeError(
+                "prefill_chunks needs a paged session; compile with "
+                "kv_block_size/kv_blocks"
+            )
+        if not chunks:
+            raise ValueError("prefill_chunks needs at least one slot chunk")
+        s = self._pair.seq_len
+        if self._pos is None:
+            self._pos = np.zeros((self.batch_size,), np.int32)
+        checked: dict[int, tuple] = {}
+        for slot, (tokens, start) in sorted(chunks.items()):
+            slot = int(slot)
+            if not 0 <= slot < self.batch_size:
+                raise IndexError(
+                    f"slot {slot} out of range [0, {self.batch_size})")
+            tokens = self._check_tokens(tokens, 1)
+            start = int(start)
+            if start != 0 and not 0 < start <= int(self._pos[slot]):
+                raise ValueError(
+                    f"chunk at start {start} leaves a gap: slot {slot} has "
+                    f"{int(self._pos[slot])} rows (chunks must be contiguous "
+                    f"or overlapping)"
+                )
+            if start + s > self._pair.max_len:
+                raise KVCapacityError([slot], [start], self._pair.max_len)
+            checked[slot] = (tokens, start)
+        # host-side state changes after ALL validation; release-then-grow
+        # is idempotent per slot, so a KVCapacityError mid-loop (pool
+        # exhaustion) is safely retried for the surviving slots
+        for slot, (_, start) in checked.items():
+            if start == 0:
+                self._release_blocks(slot)
+        for slot, (_, start) in checked.items():
+            self._grow_table(slot, blocks_for_rows(start + s,
+                                                   self._pair.kv_block_size))
+        batch_tokens = np.zeros((self.batch_size, s), np.int32)
+        starts = np.zeros((self.batch_size,), np.int32)
+        # parked lanes write through all-scratch tables — handing them
+        # their live tables would scatter placeholder K/V into real rows
+        tables = np.full_like(self._tables, SCRATCH_BLOCK)
+        for slot, (tokens, start) in checked.items():
+            batch_tokens[slot] = np.asarray(tokens[0])
+            starts[slot] = start
+            tables[slot] = self._tables[slot]
+        logits, self._pool = self._chunk_fn(
+            self.weights, self._pool, jnp.asarray(batch_tokens),
+            jnp.asarray(starts), jnp.asarray(tables),
+        )
+        for slot, (_, start) in checked.items():
+            self._pos[slot] = start + s
         return logits
 
     def free_slot(self, slot: int) -> None:

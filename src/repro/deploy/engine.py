@@ -49,6 +49,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import enum
+import math
 import time
 from collections import deque
 from typing import Callable, Sequence
@@ -179,6 +180,24 @@ class EngineStats:
     slots_busy: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+    # top-level plan dispatches per decode step (len(decode.nodes)) — the
+    # metric region fusion collapses (~5x on the reference decoders)
+    dispatches_per_step: int = 0
+    step_times_s: list = dataclasses.field(default_factory=list)
+
+    def step_latency_s(self, pct: float) -> float:
+        """Nearest-rank percentile of recorded scheduler-step wall times."""
+        if not self.step_times_s:
+            return 0.0
+        xs = sorted(self.step_times_s)
+        rank = max(1, math.ceil(pct / 100.0 * len(xs)))
+        return xs[rank - 1]
+
+    def step_latency_p50(self) -> float:
+        return self.step_latency_s(50.0)
+
+    def step_latency_p99(self) -> float:
+        return self.step_latency_s(99.0)
 
     def occupancy(self) -> float:
         """Mean fraction of slots doing real work per decode dispatch."""
@@ -208,7 +227,10 @@ class EngineStats:
             f"({self.occupancy():.0%} slot occupancy, "
             f"{self.slots_recycled} slots recycled, "
             f"{self.tokens_per_s():.1f} gen tok/s, "
-            f"{self.prompt_tokens_per_s():.1f} prompt tok/s)"
+            f"{self.prompt_tokens_per_s():.1f} prompt tok/s, "
+            f"{self.dispatches_per_step} dispatches/step, "
+            f"step p50/p99 {self.step_latency_p50() * 1e3:.1f}/"
+            f"{self.step_latency_p99() * 1e3:.1f} ms)"
         )
 
 
@@ -277,7 +299,9 @@ class Engine:
             sampling = copy.copy(sampling)
             sampling.vocab = self.cfg.vocab
         self.sampling = sampling
-        self.stats = EngineStats(max_batch=self.max_batch)
+        self.stats = EngineStats(
+            max_batch=self.max_batch,
+            dispatches_per_step=self.session.decode_dispatch_count)
         self._queue: deque[RequestHandle] = deque()
         self._slots: list[RequestHandle | None] = [None] * self.max_batch
         # engine-owned per-slot depth; free slots are pinned at 0 so their
@@ -372,24 +396,30 @@ class Engine:
         a warm-up pass, so a timed trace starts from a clean record."""
         self._used_slots = {b for b, h in enumerate(self._slots)
                             if h is not None}
-        self.stats = EngineStats(max_batch=self.max_batch)
+        self.stats = EngineStats(
+            max_batch=self.max_batch,
+            dispatches_per_step=self.session.decode_dispatch_count)
         self._note_queue()
         return self.stats
 
     # -- scheduler loop ----------------------------------------------------
 
     def step(self) -> bool:
-        """One scheduler step: admit FIFO into free slots, advance one
-        prefill chunk per mid-chunking slot (paged), then advance every
-        decoding resident by one token in a single batched decode
-        dispatch.  Returns False when the engine is idle."""
+        """One scheduler step: admit FIFO into free slots, advance every
+        mid-chunking slot by one prefill chunk in a single batched
+        dispatch (paged), then advance every decoding resident by one
+        token in a single batched decode dispatch.  Returns False when
+        the engine is idle."""
+        t_step = time.perf_counter()
+        try:
+            return self._step()
+        finally:
+            self.stats.step_times_s.append(time.perf_counter() - t_step)
+
+    def _step(self) -> bool:
         admitted = self._admit()
         worked = bool(admitted)
-        # freshly admitted slots already dispatched their first chunk in
-        # _admit — skipping them here keeps the promise of one chunk per
-        # slot per step (a resident decode's latency bubble is bounded by
-        # one chunk dispatch per mid-chunking neighbor)
-        worked = self._advance_chunks(skip=admitted) or worked
+        worked = self._advance_chunks() or worked
 
         def decode_lanes():
             return [b for b, h in enumerate(self._slots)
@@ -500,11 +530,12 @@ class Engine:
                 self.stats.slots_recycled += 1
             self._used_slots.add(free)
             if self.paged:
+                # parked out of the decode lanes; the first chunk rides
+                # this step's batched _advance_chunks dispatch
                 self._chunks[free] = chunk_starts(len(handle.prompt),
                                                   self.seq_len)
                 self._pledged[free] = need
-                self._pos[free] = 0  # parked out of the decode lanes
-                self._dispatch_chunk(free)  # first chunk lands immediately
+                self._pos[free] = 0
             else:
                 head = jnp.asarray(handle.prompt[: self.seq_len], jnp.int32)[None]
                 t0 = time.perf_counter()
@@ -518,54 +549,70 @@ class Engine:
             admitted.add(free)
         return admitted
 
-    def _advance_chunks(self, skip: set[int] = frozenset()) -> bool:
-        """Paged chunked prefill: one chunk dispatch per mid-chunking slot
-        per step, interleaved with the residents' batched decodes.
-        ``skip`` names slots that already dispatched a chunk this step
-        (fresh admissions)."""
+    def _advance_chunks(self) -> bool:
+        """Paged chunked prefill: advance EVERY mid-chunking slot by one
+        chunk in a single batched multi-slot dispatch per step
+        (:meth:`InferenceSession.prefill_chunks`), interleaved with the
+        residents' batched decodes.  The per-slot loop this replaces
+        cost one full prefill dispatch per mid-chunking neighbor per
+        step."""
         progressed = False
-        for b in sorted(self._chunks):
-            if b in skip:
+        while True:
+            pending: dict[int, tuple] = {}
+            prev_rows: dict[int, int] = {}
+            for b in sorted(self._chunks):
+                if self._slots[b] is None:  # cancelled mid-chunking
+                    self._chunks.pop(b, None)
+                    continue
+                start = self._chunks[b][0]
+                # tokens this chunk NEWLY covers: the pinned tail chunk
+                # overlaps the previous one, and crediting seq_len per
+                # dispatch would inflate prompt throughput for
+                # non-multiple prompt lengths
+                prev_rows[b] = 0 if start == 0 else int(self.session.pos[b])
+                chunk = jnp.asarray(
+                    self._slots[b].prompt[start : start + self.seq_len],
+                    jnp.int32)[None]
+                pending[b] = (chunk, start)
+            if not pending:
+                return progressed
+            t0 = time.perf_counter()
+            try:
+                logits = self.session.prefill_chunks(pending)
+                jax.block_until_ready(logits)
+            except KVCapacityError as e:
+                # requester-pays, like decode capacity: the pool cannot
+                # hold the named slots' prompts right now, so those
+                # requests finish (nothing generated), their blocks go
+                # back to the pool, and the survivors retry within the
+                # same step — the host-side checks raise BEFORE the
+                # dispatch, so no device state needs unwinding
+                self.stats.prefill_time_s += time.perf_counter() - t0
+                for b in e.slots:
+                    if self._slots[b] is not None:
+                        self._finish(self._slots[b], "kv_capacity")
+                progressed = True  # the finishes ARE scheduler progress
                 continue
-            if self._slots[b] is None:  # cancelled mid-chunking
-                self._chunks.pop(b, None)
-                continue
-            progressed = self._dispatch_chunk(b) or progressed
-        return progressed
-
-    def _dispatch_chunk(self, b: int) -> bool:
-        """Run slot ``b``'s next prefill chunk; on the final chunk the
-        request joins the decode lanes (first sampled token)."""
-        handle = self._slots[b]
-        starts = self._chunks[b]
-        start = starts.pop(0)
-        # tokens this chunk NEWLY covers: the pinned tail chunk overlaps
-        # the previous one, and crediting seq_len per dispatch would
-        # inflate prompt throughput for non-multiple prompt lengths
-        prev_rows = 0 if start == 0 else int(self.session.pos[b])
-        chunk = jnp.asarray(
-            handle.prompt[start : start + self.seq_len], jnp.int32)[None]
-        t0 = time.perf_counter()
-        try:
-            logits = self.session.prefill_chunk(b, chunk, start)
-            jax.block_until_ready(logits)
-        except KVCapacityError:
-            # requester-pays, like decode capacity: the pool cannot hold
-            # this prompt right now, so the growing request finishes
-            # (nothing generated) and its blocks go back to the pool
             self.stats.prefill_time_s += time.perf_counter() - t0
-            self._finish(handle, "kv_capacity")
-            return True  # the finish IS scheduler progress
-        self.stats.prefill_time_s += time.perf_counter() - t0
-        self.stats.prefill_dispatches += 1
-        self.stats.prompt_tokens_prefilled += start + self.seq_len - prev_rows
-        if starts:
+            self.stats.prefill_dispatches += 1
+            final_rows = None
+            for b in pending:
+                if self._slots[b] is None:
+                    continue  # evicted mid-loop by a streaming callback
+                start = self._chunks[b].pop(0)
+                self.stats.prompt_tokens_prefilled += (
+                    start + self.seq_len - prev_rows[b])
+                if self._chunks[b]:
+                    continue
+                del self._chunks[b]
+                self._pledged.pop(b, None)
+                self._pos[b] = len(self._slots[b].prompt)
+                if final_rows is None:
+                    # ONE device->host fetch covers every slot that
+                    # finishes chunking this step
+                    final_rows = jax.device_get(logits[:, -1])
+                self._consume_logits(b, final_rows[b])
             return True
-        del self._chunks[b]
-        self._pledged.pop(b, None)
-        self._pos[b] = len(handle.prompt)
-        self._consume_logits(b, jax.device_get(logits[0, -1]))
-        return True
 
     def _consume_logits(self, b: int, logits_row) -> None:
         """Turn slot ``b``'s fresh logits (predicting token index

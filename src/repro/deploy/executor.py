@@ -21,6 +21,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.heterogeneous import (
@@ -60,48 +61,50 @@ def _resolve(table: DispatchTable, desc: OpDesc, backend: Backend) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Per-kind runners
+# Per-kind node compilers
+#
+# Every scheduled node is *bound* once per (plan, backend, table): attrs
+# are unpacked, shapes described, and the DispatchTable entry resolved at
+# bind time, producing a ``run(env) -> out`` closure.  ``execute`` then
+# walks pre-compiled closures — no per-step dict lookups, no per-step
+# ``resolve`` calls (the decode hot path dispatches in a tight loop).
 # ---------------------------------------------------------------------------
 
-def _run_gemm(node: PlanNode, env, table, backend):
+def _compile_gemm(node: PlanNode, table, backend) -> Callable:
     if "heads" in node.attrs:
         raise NotImplementedError(
             f"{node.name}: un-fused attention MatMul cannot execute; lower with "
             "fuse_mha (deploy_pipeline) so attention runs as an MHA node"
         )
-    x, w = env[node.inputs[0]], env[node.inputs[1]]
-    b = env[node.inputs[2]] if len(node.inputs) > 2 else None
-    m, k, n = node.attrs["dims"]
-    act_name = node.attrs.get("activation", "identity")
+    a = node.attrs
+    m, k, n = a["dims"]
+    act_name = a.get("activation", "identity")
     if act_name not in _GEMM_ACTS:
         raise NotImplementedError(
             f"{node.name}: no GEMM lowering for fused activation {act_name!r} "
             f"(supported: {sorted(_GEMM_ACTS)})"
         )
     act = _GEMM_ACTS[act_name]
-    scales = node.attrs["scales"]
-    s_preact = node.attrs.get("s_preact")
+    scales = tuple(a["scales"])
+    s_preact = a.get("s_preact")
     if act == ACT_GELU and s_preact is None:
         s_preact = scales[2]
     g = backend_granule(backend)
-    desc = _gemm_desc(m, k, n, g, act_name, pad_m=node.attrs.get("pad_m", True))
+    desc = _gemm_desc(m, k, n, g, act_name, pad_m=a.get("pad_m", True))
     fn = _resolve(table, desc, backend)
-    return fn(x, w, b, scales=tuple(scales), act=act, s_preact=s_preact)
+    x_t, w_t = node.inputs[0], node.inputs[1]
+    b_t = node.inputs[2] if len(node.inputs) > 2 else None
+
+    def run(env):
+        b = env[b_t] if b_t is not None else None
+        return fn(env[x_t], env[w_t], b, scales=scales, act=act, s_preact=s_preact)
+
+    return run
 
 
 def _split(x, heads, head_dim):
     b, s, _ = x.shape
     return x.reshape(b, s, heads, head_dim).transpose(0, 2, 1, 3)
-
-
-def _attention_core(node, qh, kh, vh, table, backend):
-    proj = node.attrs["proj_scales"]
-    outp = node.attrs["out_scales"]
-    fn = _resolve(
-        table, _mha_desc(node.attrs["seq"], node.attrs["head_dim"], backend_granule(backend)),
-        backend,
-    )
-    return fn(qh, kh, vh, s_act=proj[2], s_out=outp[0])
 
 
 def _mha_weights(node: PlanNode, env):
@@ -113,144 +116,268 @@ def _mha_weights(node: PlanNode, env):
     return wq, wk, wv, wo, bq, bk, bv, bo
 
 
-def _run_mha(node: PlanNode, env, table, backend):
+def _compile_mha(node: PlanNode, table, backend) -> Callable:
     """Fused MHA: QKV projections -> attention core -> output projection."""
-    x = env[node.inputs[0]]
-    wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
-    s, e = node.attrs["seq"], node.attrs["d_model"]
-    h, hkv, hd = node.attrs["heads"], node.attrs["kv_heads"], node.attrs["head_dim"]
-    proj = tuple(node.attrs["proj_scales"])
-    outp = tuple(node.attrs["out_scales"])
+    a = node.attrs
+    s, e = a["seq"], a["d_model"]
+    h, hkv, hd = a["heads"], a["kv_heads"], a["head_dim"]
+    proj = tuple(a["proj_scales"])
+    outp = tuple(a["out_scales"])
     g = backend_granule(backend)
 
     gemm_q = _resolve(table, _gemm_desc(s, e, h * hd, g), backend)
     gemm_kv = _resolve(table, _gemm_desc(s, e, hkv * hd, g), backend)
-    q = gemm_q(x, wq, bq, scales=proj, act=ACT_IDENTITY, s_preact=None)
-    k = gemm_kv(x, wk, bk, scales=proj, act=ACT_IDENTITY, s_preact=None)
-    v = gemm_kv(x, wv, bv, scales=proj, act=ACT_IDENTITY, s_preact=None)
-
-    a = _attention_core(node, _split(q, h, hd), _split(k, hkv, hd), _split(v, hkv, hd),
-                        table, backend)
-    a_m = a.transpose(0, 2, 1, 3).reshape(*x.shape[:2], h * hd)
+    attn = _resolve(table, _mha_desc(s, hd, g), backend)
     gemm_o = _resolve(table, _gemm_desc(s, h * hd, e, g), backend)
-    return gemm_o(a_m, wo, bo, scales=outp, act=ACT_IDENTITY, s_preact=None)
+
+    def run(env):
+        x = env[node.inputs[0]]
+        wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
+        q = gemm_q(x, wq, bq, scales=proj, act=ACT_IDENTITY, s_preact=None)
+        k = gemm_kv(x, wk, bk, scales=proj, act=ACT_IDENTITY, s_preact=None)
+        v = gemm_kv(x, wv, bv, scales=proj, act=ACT_IDENTITY, s_preact=None)
+        at = attn(_split(q, h, hd), _split(k, hkv, hd), _split(v, hkv, hd),
+                  s_act=proj[2], s_out=outp[0])
+        a_m = at.transpose(0, 2, 1, 3).reshape(*x.shape[:2], h * hd)
+        return gemm_o(a_m, wo, bo, scales=outp, act=ACT_IDENTITY, s_preact=None)
+
+    return run
 
 
-def _run_mha_head(node: PlanNode, env, table, backend):
+def _compile_mha_head(node: PlanNode, table, backend) -> Callable:
     """One head of the paper schedule: per-head Q/K/V projection slices,
     single-head attention, *raw int32* partial output projection (the
     cluster HeadAccum requantizes once after summing all heads)."""
-    x = env[node.inputs[0]]
-    wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
-    s, e = node.attrs["seq"], node.attrs["d_model"]
-    h, hkv, hd = node.attrs["heads"], node.attrs["kv_heads"], node.attrs["head_dim"]
-    head = node.attrs["head"]
+    a = node.attrs
+    s, e = a["seq"], a["d_model"]
+    h, hkv, hd = a["heads"], a["kv_heads"], a["head_dim"]
+    head = a["head"]
     kvh = head // (h // hkv)
-    proj = tuple(node.attrs["proj_scales"])
+    proj = tuple(a["proj_scales"])
+    outp = tuple(a["out_scales"])
     g = backend_granule(backend)
+
+    gemm_h = _resolve(table, _gemm_desc(s, e, hd, g), backend)
+    attn = _resolve(table, _mha_desc(s, hd, g), backend)
 
     def slc(w, b, idx):
         lo = idx * hd
         return w[:, lo : lo + hd], None if b is None else b[lo : lo + hd]
 
-    gemm_h = _resolve(table, _gemm_desc(s, e, hd, g), backend)
-    q1 = gemm_h(x, *slc(wq, bq, head), scales=proj, act=ACT_IDENTITY, s_preact=None)
-    k1 = gemm_h(x, *slc(wk, bk, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
-    v1 = gemm_h(x, *slc(wv, bv, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
+    def run(env):
+        x = env[node.inputs[0]]
+        wq, wk, wv, wo, bq, bk, bv, bo = _mha_weights(node, env)
+        q1 = gemm_h(x, *slc(wq, bq, head), scales=proj, act=ACT_IDENTITY, s_preact=None)
+        k1 = gemm_h(x, *slc(wk, bk, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
+        v1 = gemm_h(x, *slc(wv, bv, kvh), scales=proj, act=ACT_IDENTITY, s_preact=None)
+        a1 = attn(q1[:, None], k1[:, None], v1[:, None], s_act=proj[2], s_out=outp[0])
+        wo_h = wo[head * hd : (head + 1) * hd, :]
+        return jnp.matmul(a1[:, 0], wo_h, preferred_element_type=jnp.int32)
 
-    a1 = _attention_core(node, q1[:, None], k1[:, None], v1[:, None], table, backend)
-    wo_h = wo[head * hd : (head + 1) * hd, :]
-    return jnp.matmul(a1[:, 0], wo_h, preferred_element_type=jnp.int32)
+    return run
 
 
-def _run_node(node: PlanNode, env, table, backend):
+def _compile_cluster(node: PlanNode, table, backend) -> Callable:
+    """Bind one cluster-engine node: resolve the runtime kernel for the
+    node's own shape description once, close over unpacked attrs."""
     kind = node.kind
     a = node.attrs
-    if kind == "gemm":
-        return _run_gemm(node, env, table, backend)
-    if kind == "mha":
-        if node.op == "MHAHead":
-            return _run_mha_head(node, env, table, backend)
-        return _run_mha(node, env, table, backend)
-    # cluster-only kinds resolve with the node's own shape description
     desc = OpDesc(kind, shapes=(tuple(a.get("dims", ())),))
     fn = _resolve(table, desc, backend)
+    ins = node.inputs
     if kind == "layernorm":
-        pq = {}
-        params = list(node.inputs[1:])
-        if a["norm"] != "np_layernorm" and params:
-            pq["g_q"] = env[params[0]]
-        if a["norm"] == "layernorm" and len(params) > 1:
-            pq["beta_q"] = env[params[1]]
-        return fn(a["norm"], pq, env[node.inputs[0]], a["s_gamma"], a["s_out"])
+        norm, s_gamma, s_out = a["norm"], a["s_gamma"], a["s_out"]
+        params = list(ins[1:])
+        g_t = params[0] if norm != "np_layernorm" and params else None
+        b_t = params[1] if norm == "layernorm" and len(params) > 1 else None
+
+        def run(env):
+            pq = {}
+            if g_t is not None:
+                pq["g_q"] = env[g_t]
+            if b_t is not None:
+                pq["beta_q"] = env[b_t]
+            return fn(norm, pq, env[ins[0]], s_gamma, s_out)
+
+        return run
     if kind == "add":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], scales=tuple(a["scales"]))
+        scales = tuple(a["scales"])
+        return lambda env: fn(env[ins[0]], env[ins[1]], scales=scales)
     if kind == "gelu":
         s_in, s_out = a["scales"]
-        return fn(env[node.inputs[0]], s_in=s_in, s_out=s_out)
+        return lambda env: fn(env[ins[0]], s_in=s_in, s_out=s_out)
     if kind == "embed":
-        return fn(env[node.inputs[0]], env[node.inputs[1]])
+        return lambda env: fn(env[ins[0]], env[ins[1]])
     if kind == "headaccum":
         h = a["heads"]
-        parts = [env[t] for t in node.inputs[:h]]
-        bias = env[node.inputs[h]] if len(node.inputs) > h else None
-        return fn(parts, bias, scales=tuple(a["out_scales"]))
+        out_scales = tuple(a["out_scales"])
+        bias_t = ins[h] if len(ins) > h else None
+
+        def run(env):
+            parts = [env[t] for t in ins[:h]]
+            bias = env[bias_t] if bias_t is not None else None
+            return fn(parts, bias, scales=out_scales)
+
+        return run
     if kind == "classifier":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], scale=a["scale"])
+        scale = a["scale"]
+        return lambda env: fn(env[ins[0]], env[ins[1]], scale=scale)
     if kind == "dequant":
-        return fn(env[node.inputs[0]], scale=a["scale"])
+        scale = a["scale"]
+        return lambda env: fn(env[ins[0]], scale=scale)
     # decoder / KV-cache kinds
     if kind == "rope":
         rows = a["dims"][0]
-        if len(node.inputs) > 1:
-            pos = env[node.inputs[1]]  # decode / paged chunk: runtime pos
-            if rows > 1:
-                # paged prefill chunk: S absolute angles at the chunk's
-                # global offset (scalar pos — chunk dispatches past chunk 0
-                # run one request at a time; chunk 0 broadcasts offset 0)
-                positions = jnp.asarray(pos, jnp.int32).reshape(()) + jnp.arange(rows)
-            else:
-                positions = pos
-        else:
-            positions = jnp.arange(rows)  # prefill: static 0..S
-        return fn(env[node.inputs[0]], positions, heads=a["heads"],
-                  head_dim=a["head_dim"], theta=a["theta"])
+        heads, head_dim, theta = a["heads"], a["head_dim"], a["theta"]
+        if len(ins) <= 1:
+            # numpy on purpose: this constant is built at BIND time, which
+            # can happen inside a caller's jit trace — a jnp.arange here
+            # would be staged as that trace's tracer and leak through the
+            # cached bound program into the next trace
+            positions = np.arange(rows)  # prefill: static 0..S
+            return lambda env: fn(env[ins[0]], positions, heads=heads,
+                                  head_dim=head_dim, theta=theta)
+        if rows > 1:
+            # prefill chunk: S absolute angles at each lane's global
+            # offset.  Scalar pos broadcasts one offset (single-lane
+            # chunk dispatch); a [B] pos vector shifts per lane (the
+            # engine's batched multi-slot chunk dispatch).
+            def run(env):
+                pos = jnp.asarray(env[ins[1]], jnp.int32)
+                if pos.size == 1:
+                    positions = pos.reshape(()) + jnp.arange(rows)
+                else:
+                    positions = pos.reshape(-1)[:, None] + jnp.arange(rows)
+                return fn(env[ins[0]], positions, heads=heads,
+                          head_dim=head_dim, theta=theta)
+
+            return run
+        return lambda env: fn(env[ins[0]], env[ins[1]], heads=heads,
+                              head_dim=head_dim, theta=theta)
     if kind == "attn_causal":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
-                  heads=a["heads"], kv_heads=a["kv_heads"], head_dim=a["head_dim"],
+        kw = dict(heads=a["heads"], kv_heads=a["kv_heads"], head_dim=a["head_dim"],
                   s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+        return lambda env: fn(env[ins[0]], env[ins[1]], env[ins[2]], **kw)
     if kind == "attn_cached":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
-                  env[node.inputs[3]], heads=a["heads"], head_dim=a["head_dim"],
+        kw = dict(heads=a["heads"], head_dim=a["head_dim"],
                   s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+        return lambda env: fn(env[ins[0]], env[ins[1]], env[ins[2]], env[ins[3]], **kw)
     if kind == "cache_write":
-        cache = env[node.inputs[1]] if len(node.inputs) > 1 else None
-        pos = env[node.inputs[2]] if len(node.inputs) > 2 else None
-        return fn(env[node.inputs[0]], cache, pos, kv_heads=a["kv_heads"],
-                  head_dim=a["head_dim"], max_len=a["max_len"])
+        kw = dict(kv_heads=a["kv_heads"], head_dim=a["head_dim"], max_len=a["max_len"])
+        cache_t = ins[1] if len(ins) > 1 else None
+        pos_t = ins[2] if len(ins) > 2 else None
+
+        def run(env):
+            cache = env[cache_t] if cache_t is not None else None
+            pos = env[pos_t] if pos_t is not None else None
+            return fn(env[ins[0]], cache, pos, **kw)
+
+        return run
     if kind == "attn_paged":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
-                  env[node.inputs[3]], env[node.inputs[4]], heads=a["heads"],
-                  kv_heads=a["kv_heads"], head_dim=a["head_dim"],
+        kw = dict(heads=a["heads"], kv_heads=a["kv_heads"], head_dim=a["head_dim"],
                   s_act=a["s_act"], s_out=a["s_out"], block_k=a["block_k"])
+        return lambda env: fn(env[ins[0]], env[ins[1]], env[ins[2]], env[ins[3]],
+                              env[ins[4]], **kw)
     if kind == "cache_write_paged":
-        active = env[node.inputs[4]] if len(node.inputs) > 4 else None
-        return fn(env[node.inputs[0]], env[node.inputs[1]], env[node.inputs[2]],
-                  env[node.inputs[3]], active, kv_heads=a["kv_heads"],
-                  head_dim=a["head_dim"], block_size=a["block_size"])
+        kw = dict(kv_heads=a["kv_heads"], head_dim=a["head_dim"],
+                  block_size=a["block_size"])
+        active_t = ins[4] if len(ins) > 4 else None
+
+        def run(env):
+            active = env[active_t] if active_t is not None else None
+            return fn(env[ins[0]], env[ins[1]], env[ins[2]], env[ins[3]], active, **kw)
+
+        return run
     if kind == "silumul":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], scales=tuple(a["scales"]))
+        scales = tuple(a["scales"])
+        return lambda env: fn(env[ins[0]], env[ins[1]], scales=scales)
     if kind == "lasttok":
-        return fn(env[node.inputs[0]])
+        return lambda env: fn(env[ins[0]])
     if kind == "lmhead":
-        return fn(env[node.inputs[0]], env[node.inputs[1]], scale=a["scale"],
-                  tied=a["tied"])
+        scale, tied = a["scale"], a["tied"]
+        return lambda env: fn(env[ins[0]], env[ins[1]], scale=scale, tied=tied)
     raise NotImplementedError(f"no runner for op kind {kind!r} ({node.op})")
+
+
+def _compile_region(node: PlanNode, table, backend) -> Callable:
+    """Bind a FusedRegion: compile every body node, then close the whole
+    region into ONE jitted callable — a single dispatch executes the
+    entire same-engine run (cluster closures trace into one XLA
+    computation; ita bodies trace their Pallas kernels into one fused
+    program).  Nested under an outer jit the inner jit inlines, so
+    region plans stay trace-compatible."""
+    body = tuple((b, _compile_node(b, table, backend)) for b in node.body)
+    in_names, out_names = node.inputs, node.outputs
+
+    def region_fn(*args):
+        env = dict(zip(in_names, args))
+        for b, run in body:
+            env[b.outputs[0]] = run(env)
+        return tuple(env[t] for t in out_names)
+
+    jitted = jax.jit(region_fn)
+
+    def run(env):
+        args = tuple(env[t] for t in in_names)
+        if any(isinstance(x, jax.core.Tracer) for x in args):
+            # already under a caller's jit (the session wraps the whole
+            # schedule): inline the body so the region costs nothing —
+            # a nested pjit call boundary here measurably slows the
+            # decode step without buying a dispatch back
+            return region_fn(*args)
+        return jitted(*args)
+
+    return run
+
+
+def _compile_node(node: PlanNode, table, backend) -> Callable:
+    if node.fused:
+        return _compile_region(node, table, backend)
+    kind = node.kind
+    if kind == "gemm":
+        return _compile_gemm(node, table, backend)
+    if kind == "mha":
+        if node.op == "MHAHead":
+            return _compile_mha_head(node, table, backend)
+        return _compile_mha(node, table, backend)
+    return _compile_cluster(node, table, backend)
+
+
+def _run_node(node: PlanNode, env, table, backend):
+    """Compile-and-run one node (single-shot helper; the execute path
+    binds the whole schedule once via :func:`bind_plan`)."""
+    return _compile_node(node, table, backend)(env)
 
 
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
+
+def bind_plan(
+    plan: DeploymentPlan,
+    *,
+    backend: Backend | str = Backend.W8A8,
+    table: DispatchTable | None = None,
+) -> tuple:
+    """Resolve every scheduled node to its runner ONCE, cached per plan.
+
+    Returns the bound program: a tuple of ``(node, run)`` pairs in
+    schedule order.  The cache lives on the plan instance keyed by
+    ``(backend, id(table))`` (the table object is retained, so its id
+    cannot be reused); repeated ``execute`` calls — the decode loop —
+    never touch :meth:`DispatchTable.resolve` again.
+    """
+    backend = as_backend(backend)
+    table = DEFAULT_TABLE if table is None else table
+    cache = plan.__dict__.setdefault("_bound_programs", {})
+    key = (backend, id(table))
+    hit = cache.get(key)
+    if hit is not None:
+        return hit[1]
+    program = tuple((n, _compile_node(n, table, backend)) for n in plan.nodes)
+    cache[key] = (table, program)
+    return program
+
 
 def execute(
     plan: DeploymentPlan,
@@ -266,14 +393,16 @@ def execute(
     ``frames``) to arrays with a leading batch dim; every runner
     broadcasts over that dim exactly like the model path.
     """
-    backend = as_backend(backend)
-    table = DEFAULT_TABLE if table is None else table
+    program = bind_plan(plan, backend=backend, table=table)
     env = dict(weights)
     for name in plan.inputs:
         env[name] = batch[name]
-    for node in plan.nodes:
-        out = _run_node(node, env, table, backend)
-        env[node.outputs[0]] = out
+    for node, run in program:
+        if node.fused:
+            for name, val in zip(node.outputs, run(env)):
+                env[name] = val
+        else:
+            env[node.outputs[0]] = run(env)
     outs = [env[name] for name in plan.outputs]
     return outs[0] if len(outs) == 1 else tuple(outs)
 

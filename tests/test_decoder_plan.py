@@ -168,13 +168,14 @@ class TestEnginePlacement:
         """The paper split at both phases: aligned prefill GEMMs on ITA;
         M=1 decode GEMVs (pad_m: False) on the cluster."""
         _, pair, _, _, _ = olmo_setup
-        pre_gemms = [n for n in pair.prefill.nodes if n.op == "MatMul"]
-        dec_gemms = [n for n in pair.decode.nodes if n.op == "MatMul"]
+        # flat_nodes() looks through fused regions to the original schedule
+        pre_gemms = [n for n in pair.prefill.flat_nodes() if n.op == "MatMul"]
+        dec_gemms = [n for n in pair.decode.flat_nodes() if n.op == "MatMul"]
         assert pre_gemms and all(n.engine == "ita" for n in pre_gemms)
         assert dec_gemms and all(n.engine == "cluster" for n in dec_gemms)
         # attention / rope / cache ops are cluster kernels in both phases
         for plan in (pair.prefill, pair.decode):
-            for n in plan.nodes:
+            for n in plan.flat_nodes():
                 if n.op in ("Rope", "AttnPrefill", "AttnDecode", "CacheWrite",
                             "SiluMul", "LastTok", "LMHead"):
                     assert n.engine == "cluster", (n.name, n.engine)

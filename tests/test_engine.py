@@ -422,3 +422,37 @@ class TestLifecycle:
         engine.run_until_idle(max_steps=20)
         assert h.status is RequestStatus.DONE
         assert engine.stats.slots_recycled == 0
+
+
+class TestStepLatencyStats:
+    def test_percentile_accounting(self):
+        """Nearest-rank percentiles over recorded step wall times: empty
+        record reads 0, a single sample is every percentile, and p50/p99
+        land on the 50th/99th ranked sample regardless of append order."""
+        from repro.deploy.engine import EngineStats
+
+        s = EngineStats(max_batch=2)
+        assert s.step_latency_p50() == 0.0 and s.step_latency_p99() == 0.0
+        s.step_times_s.append(0.25)
+        assert s.step_latency_p50() == 0.25 and s.step_latency_p99() == 0.25
+        s.step_times_s[:] = [i / 1000.0 for i in range(100, 0, -1)]
+        assert s.step_latency_p50() == pytest.approx(0.050)
+        assert s.step_latency_p99() == pytest.approx(0.099)
+        assert s.step_latency_s(100.0) == pytest.approx(0.100)
+        # the summary carries the new counters
+        s.dispatches_per_step = 7
+        assert "7 dispatches/step" in s.summary()
+
+    def test_engine_records_steps_and_dispatches(self, olmo):
+        cfg, params = olmo
+        engine = Engine(_compile(cfg), 2, params=params)
+        assert engine.stats.dispatches_per_step == \
+            engine.session.decode_dispatch_count
+        engine.submit(_prompts(cfg, 1, lengths=(SEQ,), seed=3)[0], 2)
+        engine.run_until_idle(max_steps=50)
+        assert len(engine.stats.step_times_s) > 0
+        assert engine.stats.step_latency_p99() >= engine.stats.step_latency_p50() > 0
+        # reset starts a fresh record but keeps the per-step dispatch count
+        fresh = engine.reset_stats()
+        assert fresh.step_times_s == []
+        assert fresh.dispatches_per_step == engine.session.decode_dispatch_count

@@ -1,0 +1,244 @@
+"""Fused decode-step mega-kernels + cost-model-driven autotuning (ISSUE 6).
+
+Acceptance contract: contiguous same-engine schedule regions collapse
+into FusedRegion plan nodes that serialize like any node but execute as
+one jitted closure — bit-exact vs the unfused plan on both backends,
+dense AND paged, with the decode dispatch count cut >= 3x; the executor
+resolves runners once at bind time (no per-step DispatchTable lookups);
+``compile(autotune=True)`` picks bit-neutral knobs deterministically so
+the second compile is a plain on-disk cache hit.
+"""
+
+import json
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.deploy import api, costmodel, patterns
+from repro.deploy.executor import bind_plan
+from repro.deploy.lowering import lower_decoder
+from repro.deploy.plan import DeploymentPlan
+from repro.models import transformer as T
+
+SEQ = 8
+MAX_LEN = 24
+BLOCK = 4
+KV_BLOCKS = 14
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = reduced(get_config("olmo-1b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def _compile(cfg, backend="w8a8", *, fuse, paged=False, **kw):
+    if paged:
+        kw.update(kv_block_size=BLOCK, kv_blocks=KV_BLOCKS)
+    return api.compile(cfg, backend=backend, seq_len=SEQ, max_len=MAX_LEN,
+                       fuse=fuse, use_cache=False, **kw)
+
+
+def _rand_tokens(cfg, shape, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), shape, 0, cfg.vocab,
+                              jnp.int32)
+
+
+class TestFuseRegions:
+    def test_structure_and_validate(self, olmo):
+        cfg, _ = olmo
+        pair = lower_decoder(cfg, SEQ, max_len=MAX_LEN, fuse=False)
+        fused = patterns.fuse_regions(pair.decode)
+        assert fused.fused
+        fused.validate()
+        # >= 3x fewer top-level dispatches is the issue's hard floor
+        assert len(pair.decode.nodes) >= 3 * len(fused.nodes)
+        # flattening recovers every original node, in schedule order
+        assert [n.name for n in fused.flat_nodes()] == \
+            [n.name for n in pair.decode.nodes]
+        for n in fused.nodes:
+            if not n.fused:
+                continue
+            assert len(n.body) >= 2
+            assert len({b.engine for b in n.body}) == 1
+            assert n.engine == n.body[0].engine
+            assert all(not b.fused for b in n.body)  # no nesting
+
+    def test_min_nodes_boundary(self, olmo):
+        cfg, _ = olmo
+        decode = lower_decoder(cfg, SEQ, max_len=MAX_LEN, fuse=False).decode
+        sizes = [len(patterns.fuse_regions(decode, min_nodes=mn).nodes)
+                 for mn in (2, 3, 4, 1000)]
+        # raising the boundary can only leave more runs unfused
+        assert sizes == sorted(sizes)
+        # a boundary larger than any run degenerates to the unfused plan
+        assert sizes[-1] == len(decode.nodes)
+
+    def test_barriers_hold(self, olmo):
+        """Fusion never hides a KV persistent-tensor write inside a
+        region and never mixes engines (the property the validator
+        enforces; here we check the pass itself honors it on both
+        geometries)."""
+        cfg, _ = olmo
+        for kw in ({}, {"kv_block_size": BLOCK, "kv_blocks": KV_BLOCKS}):
+            pair = lower_decoder(cfg, SEQ, max_len=MAX_LEN, fuse=False, **kw)
+            kv_writes = {pout for _, pout in pair.decode.kv_state if pout}
+            for phase in (patterns.fuse_regions(pair.decode),
+                          patterns.fuse_regions(pair.prefill)):
+                phase.validate()
+                for n in phase.nodes:
+                    if not n.fused:
+                        continue
+                    for b in n.body:
+                        assert b.kind not in patterns.FUSION_BARRIERS
+                        assert not (set(b.outputs) & kv_writes)
+
+    def test_json_round_trip(self, olmo):
+        cfg, _ = olmo
+        model = _compile(cfg, fuse=True, autotune=True)
+        plan = model.artifact.decode
+        assert plan.fused and plan.autotune
+        rt = DeploymentPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+        assert rt.to_dict() == plan.to_dict()
+        assert rt.fused and rt.autotune == plan.autotune
+        rt.validate()
+        # fused bodies survive with attrs and order intact
+        orig = {n.name: n for n in plan.nodes if n.fused}
+        for name, n in ((n.name, n) for n in rt.nodes if n.fused):
+            assert [b.name for b in n.body] == [b.name for b in orig[name].body]
+
+    def test_encoder_rejects_fuse(self):
+        enc = reduced(get_config("mobilebert"))
+        from repro.deploy.lowering import lower
+        with pytest.raises(NotImplementedError, match="encoder"):
+            lower(enc, SEQ, fuse=True)
+        # compile coerces instead: the fused-by-default surface stays
+        # family-agnostic
+        model = api.compile(enc, seq_len=SEQ, use_cache=False)
+        assert not model.artifact.fused
+        with pytest.raises(ValueError, match="autotune"):
+            api.compile(enc, seq_len=SEQ, autotune=True, use_cache=False)
+
+
+class TestFusedBitExact:
+    @pytest.mark.parametrize("backend", ["w8a8", "ita"])
+    @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+    def test_decode_matches_unfused(self, olmo, backend, paged):
+        """Fused and unfused plans compute the same ints: prefill logits,
+        every decode step, and the persistent KV state."""
+        cfg, params = olmo
+        steps = 2 if backend == "ita" else 4
+        unf = _compile(cfg, backend, fuse=False, paged=paged).session(
+            2, params=params)
+        fus = _compile(cfg, backend, fuse=True, paged=paged).session(
+            2, params=params)
+        assert fus.decode_dispatch_count * 3 <= unf.decode_dispatch_count
+        toks = _rand_tokens(cfg, (2, SEQ), seed=1)
+        lu, lf = unf.prefill(toks), fus.prefill(toks)
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf))
+        for _ in range(steps):
+            tok = jnp.argmax(lu[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+            lu, lf = unf.decode(tok), fus.decode(tok)
+            np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf))
+        if paged:
+            # identical chunk order => identical allocation order, so the
+            # pools match block for block (scratch row 0 excluded: the
+            # batched chunk path parks dead lanes there by design)
+            for kv in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(unf._pool[kv])[:, 1:],
+                    np.asarray(fus._pool[kv])[:, 1:])
+        else:
+            for kv in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(unf._kv[kv]), np.asarray(fus._kv[kv]))
+
+
+class TestBindOnce:
+    def test_no_resolution_after_bind(self, olmo, monkeypatch):
+        """The executor resolves each node's DispatchTable entry exactly
+        once, at bind time — repeated execution never re-resolves."""
+        from repro.core import heterogeneous as het
+        from repro.deploy.executor import bind_decoder_weights, execute_prefill
+
+        cfg, params = olmo
+        pair = _compile(cfg, fuse=True).artifact
+        weights = bind_decoder_weights(pair.prefill, cfg,
+                                       T.quantize_params(cfg, params))
+        calls = []
+        orig = het.DispatchTable.resolve
+
+        def counting(self, op, backend):
+            calls.append(op.kind)
+            return orig(self, op, backend)
+
+        monkeypatch.setattr(het.DispatchTable, "resolve", counting)
+        program = bind_plan(pair.prefill, backend="w8a8")
+        n_bind = len(calls)
+        assert n_bind > 0
+        # same plan object: bind is cached, no new resolution
+        assert bind_plan(pair.prefill, backend="w8a8") is program
+        toks = _rand_tokens(cfg, (1, SEQ))
+        execute_prefill(pair, weights, {"tokens": toks}, backend="w8a8")
+        execute_prefill(pair, weights, {"tokens": toks}, backend="w8a8")
+        assert len(calls) == n_bind, (
+            f"execute() re-resolved {len(calls) - n_bind} entries after bind")
+
+    def test_run_node_shim_still_single_shot(self, olmo):
+        # _run_node survives as the compile-and-run helper tests use
+        from repro.deploy.executor import _run_node  # noqa: F401
+
+
+class TestAutotune:
+    def test_second_compile_is_cache_hit(self, olmo):
+        cfg, _ = olmo
+        with tempfile.TemporaryDirectory() as d:
+            kw = dict(seq_len=SEQ, max_len=MAX_LEN, kv_block_size=BLOCK,
+                      kv_blocks=KV_BLOCKS, autotune=True, cache_dir=d)
+            m1 = api.compile(cfg, **kw)
+            m2 = api.compile(cfg, **kw)
+        assert not m1.cache_hit and m2.cache_hit
+        assert m1.fingerprint == m2.fingerprint
+        assert m2.artifact.decode.autotune == m1.artifact.decode.autotune
+        knobs = m1.artifact.decode.autotune["knobs"]
+        assert set(knobs) == {"kv_block_size", "kv_blocks",
+                              "fuse_min_nodes", "gemm_tiles"}
+        # pool capacity in ROWS is preserved by any re-blocking
+        assert knobs["kv_block_size"] * knobs["kv_blocks"] >= BLOCK * KV_BLOCKS
+        assert m1.options["autotune"] == knobs
+
+    def test_knob_change_changes_fingerprint(self, olmo):
+        cfg, _ = olmo
+        plain = _compile(cfg, fuse=True)
+        tuned = _compile(cfg, fuse=True, autotune=True)
+        assert plain.fingerprint != tuned.fingerprint
+
+    def test_plan_step_cost_orders_fusion(self, olmo):
+        """The cost model must price the launch overhead fusion removes:
+        fused strictly cheaper, dispatch counts exact, paged gather term
+        visible."""
+        cfg, _ = olmo
+        pair = lower_decoder(cfg, SEQ, max_len=MAX_LEN, fuse=False)
+        unf = costmodel.plan_step_cost(pair.decode)
+        fus = costmodel.plan_step_cost(patterns.fuse_regions(pair.decode))
+        assert unf.n_dispatches == len(pair.decode.nodes)
+        assert fus.n_dispatches <= unf.n_dispatches // 3
+        assert fus.t_s < unf.t_s
+        assert fus.t_compute_s == pytest.approx(unf.t_compute_s)
+        paged = lower_decoder(cfg, SEQ, max_len=MAX_LEN, kv_block_size=BLOCK,
+                              kv_blocks=KV_BLOCKS, fuse=False).decode
+        assert costmodel.plan_step_cost(paged).t_compute_s > unf.t_compute_s
+
+    def test_hw_targets_single_source(self):
+        from benchmarks import roofline
+        assert roofline.PEAK_FLOPS == costmodel.TPU_V5E.peak_flops
+        assert roofline.HBM_BW == costmodel.TPU_V5E.hbm_bw
+        ita = costmodel.hw_target("ita")
+        assert ita.peak_flops == costmodel.HW.ita_ops_per_cyc * costmodel.HW.freq_hz
+        with pytest.raises(ValueError, match="unknown hw target"):
+            costmodel.hw_target("gpu")
