@@ -11,7 +11,8 @@ occupancy, recycling — plus the resulting speedup.
 
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py --batch 4
 Prints ``mode,max_batch,requests,tokens,decode_dispatches,occupancy,
-tok_per_s``-style CSV like the other benchmark sections.
+tok_per_s,verify_ms``-style CSV like the other benchmark sections
+(``verify_ms`` is the one-time static plan-verification cost).
 """
 
 from __future__ import annotations
@@ -65,7 +66,8 @@ def main(argv=None):
     prompts = synthesize_prompts(cfg.vocab, n=n, prompt_len=args.prompt_len)
 
     print("mode,max_batch,requests,tokens,decode_dispatches,"
-          "dispatches_per_step,step_p50_ms,step_p99_ms,occupancy,tok_per_s")
+          "dispatches_per_step,step_p50_ms,step_p99_ms,occupancy,tok_per_s,"
+          "verify_ms")
     rows = {}
     for mode, mb in (("serial", 1), ("continuous", args.batch)):
         stats, _ = _run_trace(model, prompts, max_batch=mb, gen=args.gen,
@@ -75,7 +77,8 @@ def main(argv=None):
               f"{stats.decode_dispatches},{stats.dispatches_per_step},"
               f"{stats.step_latency_p50() * 1e3:.2f},"
               f"{stats.step_latency_p99() * 1e3:.2f},"
-              f"{stats.occupancy():.2f},{stats.tokens_per_s():.1f}")
+              f"{stats.occupancy():.2f},{stats.tokens_per_s():.1f},"
+              f"{stats.verify_ms:.2f}")
     serial, cont = rows["serial"], rows["continuous"]
     speedup = cont.tokens_per_s() / max(serial.tokens_per_s(), 1e-9)
     dispatch_ratio = serial.decode_dispatches / max(cont.decode_dispatches, 1)

@@ -22,6 +22,11 @@ runs a continuous-batching scheduler (FIFO admission, slot eviction +
 recycling, streaming) so no caller touches slot indices; the
 slot-indexed ``InferenceSession`` remains the documented low-level
 surface underneath.
+
+``verify`` is the static plan-analysis pass guarding all of it: memory
+hazards, KV ordering, quant ranges and engine legality are audited on
+every ``compile()`` (and via ``python -m repro.deploy.verify`` for
+artifacts on disk).
 """
 
 from repro.deploy import (  # noqa: F401
@@ -37,6 +42,7 @@ from repro.deploy import (  # noqa: F401
     patterns,
     plan,
     tiler,
+    verify,
 )
 from repro.deploy.api import (  # noqa: F401
     COMPILER_VERSION,
@@ -59,4 +65,13 @@ from repro.deploy.engine import (  # noqa: F401
     RequestHandle,
     RequestStatus,
     Temperature,
+)
+from repro.deploy.executor import PlanBindingError  # noqa: F401
+from repro.deploy.memory import MemoryPlanError  # noqa: F401
+from repro.deploy.verify import (  # noqa: F401
+    PlanDiagnostic,
+    PlanVerificationError,
+    check,
+    verify_pair,
+    verify_plan,
 )

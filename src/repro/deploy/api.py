@@ -263,6 +263,13 @@ class CompiledModel:
     options: dict
     cache_hit: bool = False
     cache_path: str | None = None
+    # static-verifier results (runtime-only: not serialized — a reloaded
+    # artifact is re-verified, not trusted).  ``diagnostics`` holds the
+    # WARNING-severity findings of the verification pass (errors raise
+    # PlanVerificationError at compile/load time instead); ``verify_ms``
+    # is the one-time wall-clock cost of that pass.
+    diagnostics: tuple = ()
+    verify_ms: float = 0.0
 
     @property
     def kind(self) -> str:
@@ -327,12 +334,17 @@ class CompiledModel:
             f.write(self.to_json())
 
     @staticmethod
-    def load(path: str, cfg: ArchConfig) -> "CompiledModel":
+    def load(path: str, cfg: ArchConfig, *, verify: bool = True) -> "CompiledModel":
         """Rehydrate a saved model.  ``cfg`` must be the config it was
         compiled from (verified against the stored fingerprint), and the
         artifact must carry the current ``COMPILER_VERSION`` — version
         bumps mean plan content/semantics may have changed, so executing
-        a stale artifact would silently compute the wrong function."""
+        a stale artifact would silently compute the wrong function.
+
+        The rehydrated artifact is re-run through the static verifier
+        (``verify=True``): a file edited or corrupted on disk raises
+        :class:`~repro.deploy.verify.PlanVerificationError` here instead
+        of executing garbage."""
         with open(path) as f:
             payload = json.load(f)
         if payload.get("format") != _PAYLOAD_FORMAT:
@@ -349,7 +361,7 @@ class CompiledModel:
                 f"{path}: fingerprint mismatch — saved for config "
                 f"{payload['arch']!r} with different contents/options"
             )
-        return CompiledModel(
+        model = CompiledModel(
             cfg=cfg,
             backend=as_backend(payload["backend"]),
             artifact=_artifact_from_payload(payload),
@@ -358,11 +370,32 @@ class CompiledModel:
             options=dict(payload["options"]),
             cache_path=path,
         )
+        if verify:
+            model.diagnostics, model.verify_ms = _verify_artifact(
+                model.artifact, context=path
+            )
+        return model
 
 
 # ---------------------------------------------------------------------------
 # compile()
 # ---------------------------------------------------------------------------
+
+def _verify_artifact(artifact, *, context: str) -> tuple[tuple, float]:
+    """Run the static plan verifier; return (warnings, elapsed ms).
+
+    Errors raise :class:`~repro.deploy.verify.PlanVerificationError`
+    (compile refuses to hand out a plan with a statically provable
+    hazard); warnings are returned for the caller to surface.
+    """
+    import time
+
+    from repro.deploy.verify import check
+
+    t0 = time.perf_counter()
+    diags = check(artifact, context=context)
+    return tuple(diags), (time.perf_counter() - t0) * 1e3
+
 
 def compile(  # noqa: A001 — torch.compile precedent
     cfg: ArchConfig,
@@ -378,6 +411,7 @@ def compile(  # noqa: A001 — torch.compile precedent
     autotune: bool = False,
     cache_dir: str | None = None,
     use_cache: bool = True,
+    verify: bool = True,
 ) -> CompiledModel:
     """Compile one config into its deployment artifact, cached on disk.
 
@@ -418,6 +452,16 @@ def compile(  # noqa: A001 — torch.compile precedent
     option change misses and recompiles.  ``use_cache=False`` bypasses
     the disk entirely.  Raises :class:`UnsupportedFamilyError` for
     families the flow cannot lower yet.
+
+    ``verify=True`` (the default) runs the static plan verifier
+    (:mod:`repro.deploy.verify`) over the artifact — freshly lowered OR
+    cache-loaded (a cache hit deserializes bytes from disk; those bytes
+    are audited, not trusted).  Error-severity findings raise
+    :class:`~repro.deploy.verify.PlanVerificationError`; warnings land
+    on ``CompiledModel.diagnostics`` and the one-time cost on
+    ``CompiledModel.verify_ms``.  ``verify`` is a *checking* knob, not a
+    lowering option: it never enters the fingerprint, so verified and
+    unverified compiles share cache entries.
     """
     be = as_backend(backend)
     granule = backend_granule(be)
@@ -480,10 +524,17 @@ def compile(  # noqa: A001 — torch.compile precedent
     if use_cache:
         artifact = _cache_load(path, fingerprint)
         if artifact is not None:
-            return CompiledModel(
+            model = CompiledModel(
                 cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
                 cache_hit=True, cache_path=path,
             )
+            if verify:
+                # a hit is bytes deserialized from disk — audit them like
+                # any other untrusted artifact before handing them out
+                model.diagnostics, model.verify_ms = _verify_artifact(
+                    artifact, context=path
+                )
+            return model
 
     artifact = lower(
         cfg, seq_len, head_by_head=head_by_head, include_head=include_head,
@@ -496,6 +547,10 @@ def compile(  # noqa: A001 — torch.compile precedent
         cfg, be, artifact, fingerprint, COMPILER_VERSION, options,
         cache_path=path if use_cache else None,
     )
+    if verify:
+        model.diagnostics, model.verify_ms = _verify_artifact(
+            artifact, context=f"compile({cfg.name})"
+        )
     if use_cache:
         _cache_store(path, model.to_dict())
     return model

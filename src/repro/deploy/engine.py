@@ -183,6 +183,9 @@ class EngineStats:
     # top-level plan dispatches per decode step (len(decode.nodes)) — the
     # metric region fusion collapses (~5x on the reference decoders)
     dispatches_per_step: int = 0
+    # one-time static-verification cost of the artifact this engine runs
+    # (CompiledModel.verify_ms; 0.0 when compiled with verify=False)
+    verify_ms: float = 0.0
     step_times_s: list = dataclasses.field(default_factory=list)
 
     def step_latency_s(self, pct: float) -> float:
@@ -230,7 +233,8 @@ class EngineStats:
             f"{self.prompt_tokens_per_s():.1f} prompt tok/s, "
             f"{self.dispatches_per_step} dispatches/step, "
             f"step p50/p99 {self.step_latency_p50() * 1e3:.1f}/"
-            f"{self.step_latency_p99() * 1e3:.1f} ms)"
+            f"{self.step_latency_p99() * 1e3:.1f} ms, "
+            f"plan verified in {self.verify_ms:.1f} ms)"
         )
 
 
@@ -301,7 +305,8 @@ class Engine:
         self.sampling = sampling
         self.stats = EngineStats(
             max_batch=self.max_batch,
-            dispatches_per_step=self.session.decode_dispatch_count)
+            dispatches_per_step=self.session.decode_dispatch_count,
+            verify_ms=getattr(self.session.model, "verify_ms", 0.0))
         self._queue: deque[RequestHandle] = deque()
         self._slots: list[RequestHandle | None] = [None] * self.max_batch
         # engine-owned per-slot depth; free slots are pinned at 0 so their
@@ -398,7 +403,8 @@ class Engine:
                             if h is not None}
         self.stats = EngineStats(
             max_batch=self.max_batch,
-            dispatches_per_step=self.session.decode_dispatch_count)
+            dispatches_per_step=self.session.decode_dispatch_count,
+            verify_ms=getattr(self.session.model, "verify_ms", 0.0))
         self._note_queue()
         return self.stats
 

@@ -394,6 +394,9 @@ def execute(
     broadcasts over that dim exactly like the model path.
     """
     program = bind_plan(plan, backend=backend, table=table)
+    # trace-time only under jit: retraces are keyed on shape/dtype, so a
+    # shape that passed once never re-pays this check in the decode loop
+    check_bindings(plan, batch=batch)
     env = dict(weights)
     for name in plan.inputs:
         env[name] = batch[name]
@@ -442,12 +445,93 @@ def _bind_attn_layer(put, put_norm, pre: str, cfg: ArchConfig, lp: dict) -> None
     put_norm(pre + "norm2", lp["norm2"])
 
 
+class PlanBindingError(ValueError):
+    """Bound arrays contradict the plan's static ``TensorSpec`` contract.
+
+    Raised at *bind time* (weights) or *trace time* (batch inputs) with
+    **every** mismatch listed — shape, dtype, missing binding — so one
+    failed bind names the whole delta instead of dying on the first
+    offender per rerun.  Under ``jax.jit`` the input check runs only
+    while tracing, so the decode hot path pays nothing steady-state.
+    """
+
+    def __init__(self, mismatches: list[str], *, what: str = "binding"):
+        self.mismatches = list(mismatches)
+        lines = "; ".join(self.mismatches)
+        super().__init__(
+            f"plan {what} rejects {len(self.mismatches)} tensor(s): {lines}"
+        )
+
+
+#: spec dtype -> array dtypes accepted for it.  int32 specs accept bool
+#: arrays (lane masks like ``active`` are carried as bools host-side and
+#: widened inside the kernels); everything else binds exactly.
+_BIND_DTYPES = {
+    "int8": {"int8"},
+    "int32": {"int32", "bool"},
+    "float32": {"float32"},
+}
+
+
+def _spec_mismatch(spec, arr, *, batched: bool) -> str | None:
+    """One mismatch line, or None if ``arr`` satisfies ``spec``.
+
+    ``batched`` specs additionally accept one leading batch dimension
+    (the session dispatches every plan at ``[B, ...]``; the plan's specs
+    describe a single request slot).
+    """
+    shape = tuple(getattr(arr, "shape", ()))
+    ok_shape = shape == spec.shape or (batched and shape[1:] == spec.shape)
+    dt = str(getattr(arr, "dtype", type(arr).__name__))
+    ok_dtype = dt in _BIND_DTYPES.get(spec.dtype, {spec.dtype})
+    if ok_shape and ok_dtype:
+        return None
+    want = f"{spec.dtype}{list(spec.shape)}"
+    got = f"{dt}{list(shape)}"
+    return f"{spec.name}: spec {want} vs bound {got}"
+
+
+def check_bindings(
+    plan: DeploymentPlan,
+    *,
+    weights: dict | None = None,
+    batch: dict | None = None,
+) -> None:
+    """Pre-flight every provided binding against the plan's ``TensorSpec``s.
+
+    ``weights``: every declared plan weight must be present with the
+    spec's exact shape and a compatible dtype.  ``batch``: every plan
+    input must be present, matching its spec exactly or with one leading
+    batch dimension.  All violations raise together as one
+    :class:`PlanBindingError`.
+    """
+    bad: list[str] = []
+    if weights is not None:
+        for name in plan.weight_names:
+            if name not in weights:
+                bad.append(f"{name}: declared plan weight never bound")
+                continue
+            m = _spec_mismatch(plan.tensors[name], weights[name], batched=False)
+            if m:
+                bad.append(m)
+        what = "weight binding"
+    if batch is not None:
+        for name in plan.inputs:
+            if name not in batch:
+                bad.append(f"{name}: plan input missing from the batch")
+                continue
+            m = _spec_mismatch(plan.tensors[name], batch[name], batched=True)
+            if m:
+                bad.append(m)
+        what = "input binding"
+    if bad:
+        raise PlanBindingError(bad, what=what)
+
+
 def _check_bound(plan: DeploymentPlan, weights: dict) -> dict:
-    """Keep only the plan's declared weights; fail on unbound ones."""
+    """Keep only the plan's declared weights; fail on unbound/misshaped ones."""
     bound = {k: v for k, v in weights.items() if k in plan.tensors and plan.tensors[k].weight}
-    missing = [t for t in plan.weight_names if t not in bound]
-    if missing:
-        raise KeyError(f"plan weights without a bound param: {missing[:8]}")
+    check_bindings(plan, weights=bound)
     return bound
 
 

@@ -443,7 +443,10 @@ def _emit_plan(
         name: _tiling_dict(t)
         for name, t in tiler.tile_graph(g, granule=granule, budget=budget).items()
     }
-    mem = memlib.plan_memory(g, persistent=persistent, aliases=aliases)
+    # .check() raises MemoryPlanError naming the offending tensor pair and
+    # byte ranges — a planner bug must fail compilation loudly, not ship a
+    # layout where two live tensors share bytes
+    mem = memlib.plan_memory(g, persistent=persistent, aliases=aliases).check()
 
     tensors = {}
     for name, info in g.tensors.items():

@@ -54,22 +54,64 @@ class Allocation:
     end: int  # schedule index of last use
 
 
+class MemoryPlanError(ValueError):
+    """The static allocator produced (or was handed) an illegal layout.
+
+    Raised by the lowering's post-allocation check with the *offending
+    tensor pairs and their byte ranges* attached — a silent ``False``
+    from an unchecked boolean would surface later as data corruption on
+    the target, which is exactly what static planning must rule out.
+    """
+
+    def __init__(self, violations: list[tuple["Allocation", "Allocation"]]):
+        self.violations = list(violations)
+        lines = [
+            f"{a.tensor} [{a.offset}, {a.offset + a.size}) live "
+            f"[{a.start}, {a.end}] overlaps {b.tensor} "
+            f"[{b.offset}, {b.offset + b.size}) live [{b.start}, {b.end}]"
+            for a, b in self.violations
+        ]
+        super().__init__(
+            "static memory plan has overlapping live tensors: "
+            + "; ".join(lines)
+        )
+
+
 @dataclass
 class MemoryPlan:
     allocations: dict[str, Allocation]
     peak: int
 
-    def check_no_overlap(self) -> bool:
+    def overlap_violations(self) -> list[tuple[Allocation, Allocation]]:
+        """All pairs of allocations that share bytes while both live.
+
+        The structured form of :meth:`check_no_overlap`: an empty list is
+        the invariant; a non-empty one names exactly which tensors race
+        over which byte ranges (consumed by :class:`MemoryPlanError` and
+        the plan verifier).
+        """
         # dedupe alias entries (several names -> one allocation record):
         # an allocation trivially "overlaps" itself in time and space.
         allocs = list(dict.fromkeys(self.allocations.values()))
+        bad: list[tuple[Allocation, Allocation]] = []
         for i, a in enumerate(allocs):
             for b in allocs[i + 1 :]:
                 time_overlap = not (a.end < b.start or b.end < a.start)
                 mem_overlap = not (a.offset + a.size <= b.offset or b.offset + b.size <= a.offset)
                 if time_overlap and mem_overlap:
-                    return False
-        return True
+                    bad.append((a, b))
+        return bad
+
+    def check_no_overlap(self) -> bool:
+        return not self.overlap_violations()
+
+    def check(self) -> "MemoryPlan":
+        """Raise :class:`MemoryPlanError` (naming tensors + byte ranges)
+        on any live overlap; return self for chaining."""
+        bad = self.overlap_violations()
+        if bad:
+            raise MemoryPlanError(bad)
+        return self
 
 
 def lifetimes(g: Graph, persistent: set | frozenset | tuple = ()) -> dict[str, tuple[int, int]]:

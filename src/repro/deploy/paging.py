@@ -41,6 +41,13 @@ from __future__ import annotations
 #: allocator only ever hands out ids ``1 .. kv_blocks``.
 SCRATCH_BLOCK = 0
 
+#: the only dispatch kinds allowed to touch a paged block pool.  Pool
+#: tensors are indirect — every access goes through the block table, and
+#: only these kernels route through it (everything else would read the
+#: scratch block or, worse, another slot's live rows).  The plan verifier
+#: flags any other consumer/producer of a pool tensor (rule KV004).
+PAGED_KV_KINDS = frozenset({"cache_write_paged", "attn_paged"})
+
 
 def blocks_for_rows(rows: int, block_size: int) -> int:
     """Blocks needed to hold cache rows ``[0, rows)``."""

@@ -48,35 +48,55 @@ def _ceil_to(d: int, g: int) -> int:
     return math.ceil(d / g) * g
 
 
-def node_opdesc(n: Node, granule: int = ITA_GRANULE) -> OpDesc:
-    """Shape/type description the support predicate sees for one node.
+def opdesc_from_attrs(kind: str, attrs: dict, granule: int = ITA_GRANULE) -> OpDesc:
+    """Shape/type description the support predicate sees for one operator.
+
+    The ONE re-derivation of the engine-mapping input: both the lowering
+    pass (:func:`node_opdesc`, over graph nodes) and the static plan
+    verifier (:func:`plan_node_opdesc`, over serialized ``PlanNode``s)
+    call this, so the compile-time decision and the post-hoc legality
+    audit can never diverge.
 
     Row (M) dims are padded to the granule — the tiler pads them with
     zero rows, which is exact for every op here — while contracting and
     output dims are reported as-is: weights have fixed compiled layouts,
     so their alignment genuinely gates acceleration.
 
-    Exception: a MatMul carrying ``pad_m: False`` reports its row count
+    Exception: a GEMM carrying ``pad_m: False`` reports its row count
     as-is.  Decode-step GEMMs are really GEMVs (M = 1); padding one row
     to the M=64 vector length would occupy the accelerator at <2%
     utilization, so Deeploy's bottom-up rule sends them to the cluster —
     the predicate must see the degenerate shape to decide that.
     """
-    kind = KIND_BY_OP.get(n.op, n.op.lower())
-    dims = n.attrs.get("dims", ())
-    if n.op == "MatMul":
+    dims = tuple(attrs.get("dims", ()))
+    if kind == "gemm":
         m, k, nn = dims
-        mm = _ceil_to(m, granule) if n.attrs.get("pad_m", True) else m
+        mm = _ceil_to(m, granule) if attrs.get("pad_m", True) else m
         return OpDesc(kind, shapes=((mm, k), (k, nn)),
-                      act=n.attrs.get("activation", "identity"))
-    if n.op in ("MHA", "MHAHead"):
-        return OpDesc(kind, shapes=((_ceil_to(n.attrs["seq"], granule),
-                                     n.attrs["head_dim"]),))
-    if n.op == "GELU":
+                      act=attrs.get("activation", "identity"))
+    if kind == "mha":
+        return OpDesc(kind, shapes=((_ceil_to(attrs["seq"], granule),
+                                     attrs["head_dim"]),))
+    if kind == "gelu":
         m = dims[0] if dims else 0
         rest = tuple(dims[1:]) if len(dims) > 1 else ()
         return OpDesc(kind, shapes=((_ceil_to(m, granule), *rest),))
-    return OpDesc(kind, shapes=(tuple(dims),) if dims else ())
+    return OpDesc(kind, shapes=(dims,) if dims else ())
+
+
+def node_opdesc(n: Node, granule: int = ITA_GRANULE) -> OpDesc:
+    """:func:`opdesc_from_attrs` for a graph :class:`Node` (pre-lowering)."""
+    return opdesc_from_attrs(KIND_BY_OP.get(n.op, n.op.lower()), n.attrs, granule)
+
+
+def plan_node_opdesc(n, granule: int = ITA_GRANULE) -> OpDesc:
+    """:func:`opdesc_from_attrs` for a serialized ``PlanNode``.
+
+    Keyed on the node's *recorded dispatch kind* — what the executor will
+    actually resolve — so the verifier audits the artifact as it will
+    run, not as it was meant to be lowered.
+    """
+    return opdesc_from_attrs(n.kind, n.attrs, granule)
 
 
 def fuse_mha(g: Graph) -> Graph:

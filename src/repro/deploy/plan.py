@@ -246,8 +246,8 @@ class DeploymentPlan:
         }
 
     @staticmethod
-    def from_dict(d: dict) -> "DeploymentPlan":
-        return DeploymentPlan(
+    def from_dict(d: dict, *, validate: bool = True) -> "DeploymentPlan":
+        plan = DeploymentPlan(
             arch=d["arch"],
             seq_len=int(d["seq_len"]),
             granule=int(d["granule"]),
@@ -266,23 +266,27 @@ class DeploymentPlan:
             kv_block_size=int(d.get("kv_block_size", 0)),
             kv_blocks=int(d.get("kv_blocks", 0)),
             autotune=_tupleize(d.get("autotune", {})),
-        ).validate()
+        )
+        # validate=False loads the artifact as-is — the verifier CLI uses
+        # it to audit corrupt plans with structured diagnostics instead of
+        # dying on the first assert.
+        return plan.validate() if validate else plan
 
     def to_json(self, indent: int | None = None) -> str:
         return json.dumps(self.to_dict(), indent=indent)
 
     @staticmethod
-    def from_json(s: str) -> "DeploymentPlan":
-        return DeploymentPlan.from_dict(json.loads(s))
+    def from_json(s: str, *, validate: bool = True) -> "DeploymentPlan":
+        return DeploymentPlan.from_dict(json.loads(s), validate=validate)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(self.to_json(indent=1))
 
     @staticmethod
-    def load(path: str) -> "DeploymentPlan":
+    def load(path: str, *, validate: bool = True) -> "DeploymentPlan":
         with open(path) as f:
-            return DeploymentPlan.from_json(f.read())
+            return DeploymentPlan.from_json(f.read(), validate=validate)
 
 
 @dataclass
@@ -381,29 +385,30 @@ class DecoderPlanPair:
         }
 
     @staticmethod
-    def from_dict(d: dict) -> "DecoderPlanPair":
-        return DecoderPlanPair(
+    def from_dict(d: dict, *, validate: bool = True) -> "DecoderPlanPair":
+        pair = DecoderPlanPair(
             arch=d["arch"],
             seq_len=int(d["seq_len"]),
             max_len=int(d["max_len"]),
-            prefill=DeploymentPlan.from_dict(d["prefill"]),
-            decode=DeploymentPlan.from_dict(d["decode"]),
+            prefill=DeploymentPlan.from_dict(d["prefill"], validate=validate),
+            decode=DeploymentPlan.from_dict(d["decode"], validate=validate),
             kv_block_size=int(d.get("kv_block_size", 0)),
             kv_blocks=int(d.get("kv_blocks", 0)),
-        ).validate()
+        )
+        return pair.validate() if validate else pair
 
     def to_json(self, indent: int | None = None) -> str:
         return json.dumps(self.to_dict(), indent=indent)
 
     @staticmethod
-    def from_json(s: str) -> "DecoderPlanPair":
-        return DecoderPlanPair.from_dict(json.loads(s))
+    def from_json(s: str, *, validate: bool = True) -> "DecoderPlanPair":
+        return DecoderPlanPair.from_dict(json.loads(s), validate=validate)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(self.to_json(indent=1))
 
     @staticmethod
-    def load(path: str) -> "DecoderPlanPair":
+    def load(path: str, *, validate: bool = True) -> "DecoderPlanPair":
         with open(path) as f:
-            return DecoderPlanPair.from_json(f.read())
+            return DecoderPlanPair.from_json(f.read(), validate=validate)

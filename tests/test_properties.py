@@ -357,3 +357,108 @@ class TestFusionProperties:
                 assert not b.fused  # no nesting
                 assert b.kind not in patterns.FUSION_BARRIERS
                 assert not (set(b.outputs) & kv_writes)
+
+
+def _plan_from_graph(g, mem):
+    """Assemble a synthetic DeploymentPlan from a scheduled graph + its
+    static memory layout (shared helper for the verifier properties).
+    ``g`` must already have every sink in ``g.outputs`` (see
+    :func:`_mark_sinks`) so the allocator and the verifier agree on
+    output lifetimes."""
+    from repro.deploy.patterns import KIND_BY_OP
+    from repro.deploy.plan import DeploymentPlan, PlanNode, TensorSpec
+
+    nodes = [
+        PlanNode(name=n.name, op=n.op, kind=KIND_BY_OP[n.op],
+                 engine="cluster", inputs=tuple(n.inputs),
+                 outputs=tuple(n.outputs), attrs=dict(n.attrs))
+        for n in g.nodes
+    ]
+    tensors = {}
+    for name, ti in g.tensors.items():
+        a = mem.allocations.get(name)
+        tensors[name] = TensorSpec(
+            name=name, shape=tuple(ti.shape), dtype=ti.dtype,
+            offset=None if a is None else a.offset,
+            size=0 if a is None else a.size,
+        )
+    return DeploymentPlan(
+        arch="synthetic", seq_len=1, granule=64, head_by_head=False,
+        quant={}, nodes=nodes, tensors=tensors, inputs=tuple(g.inputs),
+        outputs=tuple(g.outputs),
+        schedule=tuple(n.name for n in nodes), memory_peak=mem.peak,
+    )
+
+
+def _mark_sinks(g):
+    """Promote every never-consumed tensor to a graph output, so the
+    allocator keeps it live to the end of the schedule — exactly the
+    lifetime contract the verifier enforces on plan outputs (and no dead
+    intermediates remain to trip the DF002 lint)."""
+    consumed = {t for n in g.nodes for t in n.inputs}
+    g.outputs = [t for t in g.tensors
+                 if t not in consumed and t not in g.inputs] or g.outputs
+    return g
+
+
+class TestVerifierProperties:
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_valid_random_schedules_verify_clean(self, seed):
+        """Soundness of the verifier's clean direction: any topologically
+        scheduled graph with a correct static layout must produce ZERO
+        diagnostics — the lint never cries wolf on valid plans."""
+        from repro.deploy.verify import verify_plan
+
+        g = _mark_sinks(_random_graph(np.random.default_rng(seed)))
+        plan = _plan_from_graph(g, memory.plan_memory(g))
+        assert verify_plan(plan) == []
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_forced_aliasing_is_flagged(self, seed):
+        """Completeness on the memory-race class: force any two co-live
+        allocations onto the same offset and MEM001 must fire."""
+        from dataclasses import replace
+
+        from repro.deploy.verify import verify_plan
+
+        g = _mark_sinks(_random_graph(np.random.default_rng(seed)))
+        mem = memory.plan_memory(g)
+        plan = _plan_from_graph(g, mem)
+        allocs = list(dict.fromkeys(mem.allocations.values()))
+        colive = next(
+            ((a, b) for i, a in enumerate(allocs) for b in allocs[i + 1:]
+             if not (a.end < b.start or b.end < a.start)
+             and a.offset != b.offset),
+            None,
+        )
+        if colive is None:
+            return  # degenerate chain graph: nothing is ever co-live
+        a, b = colive
+        plan.tensors[a.tensor] = replace(plan.tensors[a.tensor],
+                                         offset=b.offset)
+        rules = {d.rule for d in verify_plan(plan)
+                 if d.severity == "error"}
+        assert "MEM001" in rules
+
+    @given(seed=st.integers(0, 10_000), drop=st.integers(0, 30))
+    @settings(max_examples=25, deadline=None)
+    def test_property_dropped_producer_is_flagged(self, seed, drop):
+        """Completeness on the dataflow class: delete any node whose
+        output is consumed downstream and DF001 (or DF003 for a dropped
+        output producer) must fire."""
+        from repro.deploy.verify import verify_plan
+
+        g = _mark_sinks(_random_graph(np.random.default_rng(seed)))
+        plan = _plan_from_graph(g, memory.plan_memory(g))
+        consumed = {t for n in plan.nodes for t in n.inputs}
+        keep = set(plan.outputs)
+        victims = [i for i, n in enumerate(plan.nodes)
+                   if set(n.outputs) & (consumed | keep)]
+        i = victims[drop % len(victims)]
+        del plan.nodes[i]
+        plan.schedule = tuple(n.name for n in plan.nodes)
+        rules = {d.rule for d in verify_plan(plan)
+                 if d.severity == "error"}
+        assert rules & {"DF001", "DF003"}
