@@ -9,6 +9,10 @@
                         regions vs unfused, dense vs paged KV
   engine_throughput     request-level serving engine: continuous
                         batching vs serial on the compiled artifact
+                        (``--open-loop`` adds Poisson arrivals +
+                        goodput-under-SLO, fifo vs priority-deadline)
+  serving_frontend      async serving stack overhead: engine-direct vs
+                        streaming JSON-lines HTTP over loopback
   long_context          paged KV block pool + chunked prefill vs the
                         dense per-slot region at 4-16x seq_len prompts
 
@@ -57,6 +61,12 @@ def main() -> None:
 
     engine_throughput.main(["--batch", "2", "--requests", "4",
                             "--prompt-len", "8", "--gen", "4"])
+
+    _section("serving_frontend (async stack overhead over loopback)")
+    from benchmarks import serving_frontend
+
+    serving_frontend.main(["--batch", "2", "--requests", "4", "--clients", "2",
+                           "--prompt-len", "8", "--gen", "4"])
 
     _section("long_context (paged KV pool vs dense region)")
     from benchmarks import long_context

@@ -1,0 +1,139 @@
+"""HTTP serving frontend overhead: engine-direct vs over-the-wire.
+
+The serving stack adds two layers over the raw engine — the AsyncEngine
+loop thread (condition-variable handoff per token) and the stdlib HTTP
+frontend (JSON-lines framing, one thread per connection).  This
+benchmark measures what they cost: the same request set is run (a)
+engine-direct through :class:`AsyncEngine` handles and (b) through
+``POST /v1/generate`` streaming over loopback with N concurrent client
+threads, and reports per-layer tokens/s plus TTFT/TPOT percentiles.
+
+Run:  PYTHONPATH=src python benchmarks/serving_frontend.py --batch 4 \\
+          --clients 8
+Prints ``layer,clients,requests,tokens,tok_per_s,ttft_p50_ms,
+ttft_p99_ms,tpot_p50_ms,tpot_p99_ms`` CSV like the other sections.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+from repro.configs import get_config, reduced
+
+
+def _percentile(xs, pct):
+    import math
+
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[max(1, math.ceil(pct / 100 * len(xs))) - 1]
+
+
+def _engine_direct(eng, prompts, gen):
+    t0 = time.monotonic()
+    handles = [eng.submit(p, gen) for p in prompts]
+    for h in handles:
+        h.result(timeout=600)
+    wall = time.monotonic() - t0
+    toks = sum(len(h.tokens) for h in handles)
+    return toks, wall
+
+
+def _over_http(host, port, prompts, gen, clients):
+    from repro.launch.cli import http_generate
+
+    results: dict[int, tuple[int, float, list[float]]] = {}
+
+    def worker(ci):
+        toks, ttfts = 0, []
+        t0 = time.monotonic()
+        for p in prompts[ci::clients]:
+            sent = time.monotonic()
+            first = None
+            for ev in http_generate(host, port, p, gen, timeout=600):
+                if "token" in ev and first is None:
+                    first = time.monotonic() - sent
+                if "token" in ev:
+                    toks += 1
+            ttfts.append(first if first is not None else 0.0)
+        results[ci] = (toks, time.monotonic() - t0, ttfts)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    toks = sum(r[0] for r in results.values())
+    ttfts = [t for r in results.values() for t in r[2]]
+    return toks, wall, ttfts
+
+
+def main(argv=None):
+    from repro.deploy import api
+    from repro.deploy.serving import AsyncEngine, ServingFrontend
+    from repro.launch.cli import (
+        add_engine_args,
+        add_serving_args,
+        make_sampling,
+        make_scheduler_from_args,
+        parse_backend,
+        resolve_requests,
+        synthesize_prompts,
+    )
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", type=parse_backend, default="w8a8")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent HTTP client threads")
+    add_engine_args(ap)
+    add_serving_args(ap)
+    args = ap.parse_args(argv)
+    n = resolve_requests(args, factor=3)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = api.compile(cfg, backend=args.backend, seq_len=args.prompt_len,
+                        max_len=args.prompt_len + args.gen + 1)
+    prompts = synthesize_prompts(cfg.vocab, n=n, prompt_len=args.prompt_len)
+
+    print("layer,clients,requests,tokens,tok_per_s,ttft_p50_ms,ttft_p99_ms,"
+          "tpot_p50_ms,tpot_p99_ms")
+    eng = AsyncEngine(model, args.batch, sampling=make_sampling(args),
+                      scheduler=make_scheduler_from_args(args))
+    # warm-up jits before either timed layer (>= 2 generated tokens so
+    # the decode path traces too, not just prefill)
+    eng.submit(prompts[0], 3).result(timeout=600)
+    eng.engine.reset_stats()
+    toks, wall = _engine_direct(eng, prompts, args.gen)
+    s = eng.stats
+    print(f"engine,{args.clients},{n},{toks},{toks / wall:.1f},"
+          f"{s.ttft(50) * 1e3:.2f},{s.ttft(99) * 1e3:.2f},"
+          f"{s.tpot(50) * 1e3:.2f},{s.tpot(99) * 1e3:.2f}")
+
+    eng.engine.reset_stats()
+    fe = ServingFrontend(eng, port=0)
+    host, port = fe.start()
+    toks, wall, ttfts = _over_http(host, port, prompts, args.gen,
+                                   args.clients)
+    s = eng.stats
+    print(f"http,{args.clients},{n},{toks},{toks / wall:.1f},"
+          f"{s.ttft(50) * 1e3:.2f},{s.ttft(99) * 1e3:.2f},"
+          f"{s.tpot(50) * 1e3:.2f},{s.tpot(99) * 1e3:.2f}")
+    print(f"# client-observed TTFT over loopback: p50 "
+          f"{_percentile(ttfts, 50) * 1e3:.2f} ms, p99 "
+          f"{_percentile(ttfts, 99) * 1e3:.2f} ms "
+          f"({args.clients} concurrent streaming connections)")
+    fe.shutdown(drain=True, timeout=60)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,14 @@ accelerator engine, XLA fallbacks on the cluster).
 plan cache keyed by (config fingerprint, compiler version) and batched
 continuous decoding (per-request ``pos`` vectors).  ``engine`` is the
 request-level serving layer on top: ``Engine.submit() -> RequestHandle``
-runs a continuous-batching scheduler (FIFO admission, slot eviction +
-recycling, streaming) so no caller touches slot indices; the
+runs a continuous-batching scheduler (pluggable admission, slot eviction
++ recycling, streaming) so no caller touches slot indices; the
 slot-indexed ``InferenceSession`` remains the documented low-level
-surface underneath.
+surface underneath.  ``serving`` stacks the async frontier on top:
+``AsyncEngine`` runs the loop on a background thread, scheduler policies
+(``FIFO`` / ``PriorityDeadline``) order admission with SLOs, preemption
+and load shedding, and ``ServingFrontend`` speaks streaming JSON-lines
+HTTP (``python -m repro.deploy.serving``).
 
 ``verify`` is the static plan-analysis pass guarding all of it: memory
 hazards, KV ordering, quant ranges and engine legality are audited on
@@ -41,6 +45,7 @@ from repro.deploy import (  # noqa: F401
     paging,
     patterns,
     plan,
+    serving,
     tiler,
     verify,
 )

@@ -37,6 +37,7 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -104,13 +105,18 @@ class KVCapacityError(ValueError):
     """
 
     def __init__(self, slots, pos, max_len: int, *, reason: str = "max_len",
-                 evictable=()):
+                 evictable=(), message: str | None = None):
         self.slots = tuple(int(s) for s in slots)
         self.pos = tuple(int(p) for p in pos)
         self.max_len = int(max_len)
         self.reason = reason
         self.evictable = tuple(int(s) for s in evictable)
-        if reason == "pool":
+        if message is not None:
+            # submit-time raisers (Engine.validate_request) describe the
+            # refusal in request terms; the structured attributes above
+            # still drive any programmatic handling
+            msg = message
+        elif reason == "pool":
             msg = (
                 f"paged KV pool exhausted: slot(s) {list(self.slots)} at pos "
                 f"{list(self.pos)} need new blocks and none are free; "
@@ -572,6 +578,18 @@ class InferenceSession:
     row-local, so slot ``b`` computes the same ints as an independent
     single-request trajectory at depth ``pos[b]`` (tested bit-exactly on
     both backends).
+
+    **Thread affinity**: KV state, the block allocator and per-slot
+    depths are plain host objects with no internal locking — a session
+    belongs to exactly ONE thread at a time.  The first *mutating* call
+    (prefill / decode / free_slot) binds the session to the calling
+    thread; mutating from any other thread afterwards raises
+    ``RuntimeError`` instead of silently corrupting KV state.  Hand a
+    session across threads explicitly with :meth:`rebind_thread` — e.g.
+    :class:`~repro.deploy.serving.async_engine.AsyncEngine` constructs
+    the engine on the caller's thread and rebinds to its loop thread
+    before the first step.  Reads (``pos``, capacity properties, stats)
+    are unguarded.
     """
 
     def __init__(
@@ -641,6 +659,7 @@ class InferenceSession:
             self._forward_fn = jax.jit(
                 lambda w, b: execute(plan, w, b, backend=be, table=tb)
             )
+        self._owner_ident: int | None = None  # thread affinity (lazy bind)
 
     # -- shared ------------------------------------------------------------
 
@@ -650,6 +669,28 @@ class InferenceSession:
                 f"InferenceSession.{method} is a {kind} method; this session "
                 f"wraps a {self.model.kind} artifact ({self.cfg.name})"
             )
+
+    def _affine(self, method: str) -> None:
+        """Bind the session to the first mutating caller's thread; refuse
+        mutation from any other thread (see the class docstring)."""
+        ident = threading.get_ident()
+        if self._owner_ident is None:
+            self._owner_ident = ident
+        elif self._owner_ident != ident:
+            raise RuntimeError(
+                f"InferenceSession.{method} called from thread {ident} but "
+                f"the session is bound to thread {self._owner_ident}; KV "
+                f"state has no internal locking — call rebind_thread() from "
+                f"the new owning thread to transfer ownership explicitly"
+            )
+
+    def rebind_thread(self) -> None:
+        """Transfer session ownership to the *calling* thread.
+
+        The caller asserts the previous owner has stopped mutating (e.g.
+        an engine handing its session to a background loop thread).
+        """
+        self._owner_ident = threading.get_ident()
 
     # -- encoder -----------------------------------------------------------
 
@@ -758,6 +799,7 @@ class InferenceSession:
         batched chunk-0 dispatch).
         """
         self._require("decoder", "prefill")
+        self._affine("prefill")
         tokens = self._check_tokens(tokens, self.batch_size)
         s = self._pair.seq_len
         if self._pair.paged:
@@ -799,6 +841,7 @@ class InferenceSession:
         [1, 1, vocab_padded].
         """
         self._require("decoder", "prefill_slot")
+        self._affine("prefill_slot")
         if not 0 <= slot < self.batch_size:
             raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
         if self._pair.paged:
@@ -854,6 +897,7 @@ class InferenceSession:
         blocks for the chunk's rows cannot be allocated.
         """
         self._require("decoder", "prefill_chunk")
+        self._affine("prefill_chunk")
         if not self._pair.paged:
             raise RuntimeError(
                 "prefill_chunk needs a paged session; compile with "
@@ -909,6 +953,7 @@ class InferenceSession:
         vocab_padded]; row ``b`` is meaningful only for ``b in chunks``.
         """
         self._require("decoder", "prefill_chunks")
+        self._affine("prefill_chunks")
         if not self._pair.paged:
             raise RuntimeError(
                 "prefill_chunks needs a paged session; compile with "
@@ -968,6 +1013,7 @@ class InferenceSession:
         this on eviction/completion; dense sessions only reset the depth.
         """
         self._require("decoder", "free_slot")
+        self._affine("free_slot")
         if not 0 <= slot < self.batch_size:
             raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
         if self._pair.paged:
@@ -1025,6 +1071,7 @@ class InferenceSession:
         skip capacity checks and whose depth does not advance.
         """
         self._require("decoder", "decode")
+        self._affine("decode")
         paged = self._pair.paged
         if (self._kv is None) if not paged else (self._pos is None):
             raise RuntimeError("decode before prefill: no KV state in the session")

@@ -8,9 +8,20 @@ that: callers ``submit(prompt_tokens, max_new_tokens)`` and get back a
 continuous-batching scheduler loop on top of the one statically planned
 artifact:
 
-* **FIFO admission** — queued requests enter free (or newly recycled)
-  slots via ``session.prefill_slot`` while resident requests keep
-  decoding mid-flight;
+* **pluggable admission** — queued requests enter free (or newly
+  recycled) slots via ``session.prefill_slot`` while resident requests
+  keep decoding mid-flight.  The *order* is a policy value
+  (:mod:`repro.deploy.serving.scheduler`): ``FIFO`` (the default,
+  byte-compatible with the historical behavior) or ``PriorityDeadline``
+  (per-request ``priority`` / ``ttft_slo_ms`` / ``deadline_ms``,
+  aging, deadline-driven preemption, bounded-queue load shedding with
+  a structured ``QueueFullError``);
+* **preemption + requeue** — when the policy demands it, an over-budget
+  resident is evicted *back to the queue* (paged KV frees its blocks
+  immediately); on re-admission its prefix — prompt plus every token it
+  already generated — is re-prefilled/teacher-forced and generation
+  resumes at the same sampling index, so a requeued request's final
+  stream is bit-exact vs an uninterrupted run;
 * **one batched decode dispatch per step** — every resident request
   advances one token at its own depth (the session's per-request ``pos``
   vector), so the batch dimension stays as full as the traffic allows
@@ -50,8 +61,8 @@ import copy
 import dataclasses
 import enum
 import math
+import threading
 import time
-from collections import deque
 from typing import Callable, Sequence
 
 import jax
@@ -60,6 +71,12 @@ import numpy as np
 
 from repro.deploy.api import CompiledModel, InferenceSession, KVCapacityError
 from repro.deploy.paging import blocks_for_rows, chunk_starts
+from repro.deploy.serving.scheduler import (
+    FIFO,
+    QueueFullError,
+    Scheduler,
+    effective_deadline,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +136,7 @@ class RequestStatus(enum.Enum):
     PREFILLING = "prefilling"  # resident; prompt tokens still being consumed
     DECODING = "decoding"      # resident; generating
     DONE = "done"              # finished: eos / length / kv_capacity
-    EVICTED = "evicted"        # cancelled; slot (if any) recycled
+    EVICTED = "evicted"        # cancelled or displacement-shed; slot recycled
 
 
 class RequestHandle:
@@ -130,11 +147,21 @@ class RequestHandle:
     ``"kv_capacity"`` (evicted by the static KV region's capacity, with
     whatever it generated so far) or ``"cancelled"``.  ``on_token(tok)``
     fires synchronously the moment each token is sampled (streaming).
+
+    SLO fields (consumed by :class:`~repro.deploy.serving.scheduler.
+    PriorityDeadline`; ignored by FIFO): ``priority`` (lower = more
+    urgent), ``ttft_slo_ms`` (time-to-first-token target) and
+    ``deadline_ms`` (completion budget — past it the request is
+    preemptible).  ``arrival_t`` / ``first_token_t`` / ``finish_t`` are
+    engine-clock timestamps; ``preemptions`` counts how many times this
+    request was evicted-to-queue and re-admitted.
     """
 
     def __init__(self, engine: "Engine", rid: int, prompt: tuple[int, ...],
                  max_new_tokens: int, eos_id: int | None,
-                 on_token: Callable[[int], None] | None):
+                 on_token: Callable[[int], None] | None,
+                 *, priority: int = 0, ttft_slo_ms: float | None = None,
+                 deadline_ms: float | None = None, arrival_t: float = 0.0):
         self._engine = engine
         self.rid = rid
         self.prompt = prompt
@@ -145,10 +172,42 @@ class RequestHandle:
         self.tokens: list[int] = []
         self.finish_reason: str | None = None
         self.slot: int | None = None  # scheduler-internal residency
+        # SLO contract (absolute times on the engine's injected clock)
+        self.priority = int(priority)
+        self.ttft_slo_ms = ttft_slo_ms
+        self.deadline_ms = deadline_ms
+        self.arrival_t = float(arrival_t)
+        self.deadline_t = (None if deadline_ms is None
+                           else self.arrival_t + float(deadline_ms) / 1e3)
+        self.admit_deadline_t = effective_deadline(
+            self.arrival_t, ttft_slo_ms, deadline_ms)
+        self.first_token_t: float | None = None
+        self._last_token_t: float | None = None
+        self.finish_t: float | None = None
+        self.preemptions = 0
+        # tokens already generated before the last preemption: on
+        # re-admission the engine teacher-forces tokens[:resumed] (they
+        # are part of the request's prefix now) and resumes sampling at
+        # index ``resumed`` — identical fold-in indices, identical stream
+        self.resumed = 0
 
     @property
     def done(self) -> bool:
         return self.status in (RequestStatus.DONE, RequestStatus.EVICTED)
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Observed time-to-first-token (None before the first token)."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t
+
+    def prefix(self) -> tuple[int, ...]:
+        """The token prefix an admission must (re-)establish in the KV
+        region: the prompt plus every token generated before a
+        preemption.  Fresh requests have no tokens yet, so this is just
+        the prompt."""
+        return self.prompt + tuple(self.tokens[: self.resumed])
 
     def cancel(self) -> None:
         """Withdraw the request (queued or mid-flight) and free its slot."""
@@ -160,6 +219,15 @@ class RequestHandle:
                 f"finish_reason={self.finish_reason!r})")
 
 
+def _nearest_rank(xs: list, pct: float) -> float:
+    """Nearest-rank percentile of a sample list (0.0 when empty)."""
+    if not xs:
+        return 0.0
+    ordered = sorted(xs)
+    rank = max(1, math.ceil(pct / 100.0 * len(ordered)))
+    return ordered[rank - 1]
+
+
 @dataclasses.dataclass
 class EngineStats:
     """Live scheduler counters (one record per engine, updated in place)."""
@@ -168,6 +236,9 @@ class EngineStats:
     requests_submitted: int = 0
     requests_completed: int = 0
     requests_evicted: int = 0      # cancellations
+    preemptions: int = 0           # residents evicted-to-queue by the policy
+    requeues: int = 0              # preempted requests re-entering the queue
+    shed_requests: int = 0         # refused (429) or displaced by the bounded queue
     slots_recycled: int = 0        # admissions into a previously used slot
     prefill_dispatches: int = 0
     decode_dispatches: int = 0
@@ -187,20 +258,42 @@ class EngineStats:
     # (CompiledModel.verify_ms; 0.0 when compiled with verify=False)
     verify_ms: float = 0.0
     step_times_s: list = dataclasses.field(default_factory=list)
+    # request-level latency samples (engine clock): TTFT is submit ->
+    # first *generated* token (queue wait + prefill + any preemption
+    # included — the number an SLO is written against); TPOT is the gap
+    # between consecutive generated tokens of one request
+    ttft_s: list = dataclasses.field(default_factory=list)
+    tpot_s: list = dataclasses.field(default_factory=list)
 
     def step_latency_s(self, pct: float) -> float:
         """Nearest-rank percentile of recorded scheduler-step wall times."""
-        if not self.step_times_s:
-            return 0.0
-        xs = sorted(self.step_times_s)
-        rank = max(1, math.ceil(pct / 100.0 * len(xs)))
-        return xs[rank - 1]
+        return _nearest_rank(self.step_times_s, pct)
 
     def step_latency_p50(self) -> float:
         return self.step_latency_s(50.0)
 
     def step_latency_p99(self) -> float:
         return self.step_latency_s(99.0)
+
+    def ttft(self, pct: float) -> float:
+        """Nearest-rank percentile of observed TTFT samples (seconds)."""
+        return _nearest_rank(self.ttft_s, pct)
+
+    def tpot(self, pct: float) -> float:
+        """Nearest-rank percentile of observed per-output-token gaps."""
+        return _nearest_rank(self.tpot_s, pct)
+
+    def goodput_under_slo(self) -> float:
+        """Fraction of *finished* SLO-carrying requests whose TTFT met
+        their ``ttft_slo_ms`` (shed requests never produce a sample, so
+        callers measuring end-to-end goodput add them to the
+        denominator themselves — see ``benchmarks/engine_throughput``).
+        1.0 when no request carried an SLO."""
+        if not self._slo_outcomes:
+            return 1.0
+        return sum(self._slo_outcomes) / len(self._slo_outcomes)
+
+    _slo_outcomes: list = dataclasses.field(default_factory=list)
 
     def occupancy(self) -> float:
         """Mean fraction of slots doing real work per decode dispatch."""
@@ -223,9 +316,20 @@ class EngineStats:
         return done / max(self.prefill_time_s + self.decode_time_s, 1e-9)
 
     def summary(self) -> str:
+        slo = ""
+        if self.ttft_s:
+            slo = (f", ttft p50/p99 {self.ttft(50) * 1e3:.1f}/"
+                   f"{self.ttft(99) * 1e3:.1f} ms"
+                   f", tpot p50/p99 {self.tpot(50) * 1e3:.1f}/"
+                   f"{self.tpot(99) * 1e3:.1f} ms")
+        if self.preemptions or self.shed_requests:
+            slo += (f", {self.preemptions} preemptions / "
+                    f"{self.requeues} requeues / "
+                    f"{self.shed_requests} shed")
         return (
             f"{self.requests_completed}/{self.requests_submitted} requests done "
-            f"({self.requests_evicted} cancelled), {self.tokens_generated} tokens "
+            f"({self.requests_evicted} cancelled{slo}), "
+            f"{self.tokens_generated} tokens "
             f"in {self.decode_dispatches} decode dispatches "
             f"({self.occupancy():.0%} slot occupancy, "
             f"{self.slots_recycled} slots recycled, "
@@ -252,6 +356,23 @@ class Engine:
     ``sampling`` is a policy callable ``(logits_row, rid, index) -> int``
     — :class:`Greedy` (default) or :class:`Temperature` with a
     caller-supplied key.
+
+    ``scheduler`` is the admission policy
+    (:mod:`repro.deploy.serving.scheduler`): :class:`FIFO` by default —
+    byte-compatible with the historical behavior — or
+    :class:`PriorityDeadline` for SLO-aware ordering, preemption and
+    load shedding.  ``clock`` is the monotonic time source for arrival
+    stamps, TTFT/TPOT samples and deadline checks (injectable so
+    scheduling is deterministic under a fake clock in tests; defaults to
+    :func:`time.monotonic`).
+
+    Thread contract: the *step loop* (``step`` / ``run_until_idle``)
+    belongs to exactly one thread — the caller's here, a dedicated
+    background thread under :class:`~repro.deploy.serving.async_engine.
+    AsyncEngine`.  ``submit`` and queued-``cancel`` are safe from any
+    thread (the queue frontier is lock-protected); cancelling a
+    *resident* request must happen on the loop thread (AsyncEngine
+    routes it there).
     """
 
     def __init__(
@@ -260,6 +381,8 @@ class Engine:
         max_batch: int | None = None,
         *,
         sampling=None,
+        scheduler: Scheduler | None = None,
+        clock: Callable[[], float] | None = None,
         params: dict | None = None,
         key=None,
         table=None,
@@ -303,11 +426,21 @@ class Engine:
             sampling = copy.copy(sampling)
             sampling.vocab = self.cfg.vocab
         self.sampling = sampling
+        if scheduler is not None and len(scheduler) != 0:
+            raise ValueError(
+                "scheduler already holds queued requests; each Engine "
+                "needs its own (fresh) policy instance")
+        self.scheduler = scheduler if scheduler is not None else FIFO()
+        self.clock = clock if clock is not None else time.monotonic
+        # guards the queue frontier — scheduler contents, rid assignment,
+        # queue-depth stats — so submit()/queued-cancel() are safe from
+        # any thread while the loop thread admits.  Slot/device state is
+        # loop-thread-only and never touched under this lock's waiters.
+        self._lock = threading.RLock()
         self.stats = EngineStats(
             max_batch=self.max_batch,
             dispatches_per_step=self.session.decode_dispatch_count,
             verify_ms=getattr(self.session.model, "verify_ms", 0.0))
-        self._queue: deque[RequestHandle] = deque()
         self._slots: list[RequestHandle | None] = [None] * self.max_batch
         # engine-owned per-slot depth; free slots are pinned at 0 so their
         # placeholder lane in a batched dispatch never trips KV capacity
@@ -329,25 +462,23 @@ class Engine:
 
     # -- submission --------------------------------------------------------
 
-    def submit(
-        self,
-        prompt_tokens: Sequence[int],
-        max_new_tokens: int,
-        *,
-        eos_id: int | None = None,
-        on_token: Callable[[int], None] | None = None,
-    ) -> RequestHandle:
-        """Enqueue one request; the scheduler admits it FIFO on a later
-        :meth:`step`.
+    def validate_request(self, prompt: tuple[int, ...],
+                         max_new_tokens: int) -> None:
+        """Every submit-time admission check, raised as structured errors
+        *before* any engine state changes — a bad request must fail at
+        the submission boundary, never mid-loop with a slot half-built.
 
-        ``prompt_tokens`` must be at least the compiled prompt length
-        (``seq_len``) and at most the KV capacity (``max_len``); tokens
-        past ``seq_len`` are teacher-forced through batched decode
-        (dense) or prefilled in ``seq_len``-sized chunks (paged).
-        Generation stops at ``eos_id`` (recorded as the final token),
-        after ``max_new_tokens``, or when the KV region fills.
+        Raises ``ValueError`` for empty/short/over-``max_len`` prompts
+        and non-positive budgets, :class:`KVCapacityError`
+        (``reason="pool"``) when a prompt can never fit the paged pool.
         """
-        prompt = tuple(int(t) for t in prompt_tokens)
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if len(prompt) == 0:
+            raise ValueError(
+                "empty prompt: a request needs at least seq_len="
+                f"{self.seq_len} prompt tokens (the prefill schedule is "
+                "static)")
         if len(prompt) < self.seq_len:
             raise ValueError(
                 f"prompt has {len(prompt)} tokens but the compiled prefill "
@@ -360,33 +491,89 @@ class Engine:
         if self.paged:
             need = blocks_for_rows(len(prompt), self.session.kv_block_size)
             if need > self.session.kv_blocks:
-                raise ValueError(
-                    f"prompt needs {need} KV blocks but the pool holds "
-                    f"{self.session.kv_blocks} total; recompile with more "
-                    f"kv_blocks")
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        handle = RequestHandle(self, self._next_rid, prompt, int(max_new_tokens),
-                               eos_id, on_token)
-        self._next_rid += 1
-        self._queue.append(handle)
-        self.stats.requests_submitted += 1
-        self._note_queue()
+                raise KVCapacityError(
+                    (), (), self.max_len, reason="pool",
+                    message=(
+                        f"prompt needs {need} KV blocks but the pool holds "
+                        f"{self.session.kv_blocks} total; recompile with "
+                        f"more kv_blocks"))
+
+    def submit(
+        self,
+        prompt_tokens: Sequence[int],
+        max_new_tokens: int,
+        *,
+        eos_id: int | None = None,
+        on_token: Callable[[int], None] | None = None,
+        priority: int = 0,
+        ttft_slo_ms: float | None = None,
+        deadline_ms: float | None = None,
+    ) -> RequestHandle:
+        """Enqueue one request; the scheduler policy admits it on a
+        later :meth:`step`.
+
+        ``prompt_tokens`` must be at least the compiled prompt length
+        (``seq_len``) and at most the KV capacity (``max_len``); tokens
+        past ``seq_len`` are teacher-forced through batched decode
+        (dense) or prefilled in ``seq_len``-sized chunks (paged).
+        Generation stops at ``eos_id`` (recorded as the final token),
+        after ``max_new_tokens``, or when the KV region fills.
+
+        ``priority`` / ``ttft_slo_ms`` / ``deadline_ms`` are the
+        request's SLO contract (see
+        :class:`~repro.deploy.serving.scheduler.PriorityDeadline`; FIFO
+        ignores them).  A bounded-queue policy may refuse the submission
+        with :class:`~repro.deploy.serving.scheduler.QueueFullError`
+        (counted in ``stats.shed_requests``; no handle is created), or
+        accept it by *displacement* — a strictly lower-ranked queued
+        request is finished with reason ``"shed"`` to make room (also
+        counted in ``stats.shed_requests``).  Safe to call from any
+        thread.
+        """
+        prompt = tuple(int(t) for t in prompt_tokens)
+        self.validate_request(prompt, max_new_tokens)
+        if ttft_slo_ms is not None and ttft_slo_ms < 0:
+            raise ValueError(f"ttft_slo_ms must be >= 0, got {ttft_slo_ms}")
+        if deadline_ms is not None and deadline_ms < 0:
+            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
+        with self._lock:
+            now = self.clock()
+            handle = RequestHandle(
+                self, self._next_rid, prompt, int(max_new_tokens),
+                eos_id, on_token, priority=priority,
+                ttft_slo_ms=ttft_slo_ms, deadline_ms=deadline_ms,
+                arrival_t=now)
+            try:
+                displaced = self.scheduler.add(handle, now)
+            except QueueFullError:
+                self.stats.shed_requests += 1
+                raise
+            if displaced is not None:
+                self.stats.shed_requests += 1
+            self._next_rid += 1
+            self.stats.requests_submitted += 1
+            self._note_queue()
+        if displaced is not None:
+            # outside the lock, like cancel(): the displaced request was
+            # queued (no slot/device state), its waiters see "shed"
+            self._finish(displaced, "shed", status=RequestStatus.EVICTED)
         return handle
 
     def cancel(self, handle: RequestHandle) -> None:
-        if handle.done:
-            return
-        if handle.status is RequestStatus.QUEUED:
-            self._queue.remove(handle)
-            self._note_queue()
+        with self._lock:
+            if handle.done:
+                return
+            if handle.status is RequestStatus.QUEUED:
+                self.scheduler.remove(handle)
+                self._note_queue()
         self._finish(handle, "cancelled", status=RequestStatus.EVICTED)
 
     # -- introspection -----------------------------------------------------
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self.scheduler)
 
     @property
     def slots_busy(self) -> int:
@@ -394,7 +581,7 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        return not self._queue and self.slots_busy == 0
+        return self.queue_depth == 0 and self.slots_busy == 0
 
     def reset_stats(self) -> EngineStats:
         """Zero the counters *and* the slot-reuse bookkeeping — e.g. after
@@ -411,7 +598,8 @@ class Engine:
     # -- scheduler loop ----------------------------------------------------
 
     def step(self) -> bool:
-        """One scheduler step: admit FIFO into free slots, advance every
+        """One scheduler step: apply the policy's preemptions, admit
+        queued requests into free slots, advance every
         mid-chunking slot by one prefill chunk in a single batched
         dispatch (paged), then advance every decoding resident by one
         token in a single batched decode dispatch.  Returns False when
@@ -423,8 +611,9 @@ class Engine:
             self.stats.step_times_s.append(time.perf_counter() - t_step)
 
     def _step(self) -> bool:
+        worked = self._preempt()
         admitted = self._admit()
-        worked = bool(admitted)
+        worked = bool(admitted) or worked
         worked = self._advance_chunks() or worked
 
         def decode_lanes():
@@ -497,53 +686,104 @@ class Engine:
     # -- internals ---------------------------------------------------------
 
     def _note_queue(self) -> None:
-        self.stats.queue_depth = len(self._queue)
-        self.stats.peak_queue_depth = max(self.stats.peak_queue_depth,
-                                          self.stats.queue_depth)
-        self.stats.slots_busy = self.slots_busy
+        with self._lock:
+            self.stats.queue_depth = len(self.scheduler)
+            self.stats.peak_queue_depth = max(self.stats.peak_queue_depth,
+                                              self.stats.queue_depth)
+            self.stats.slots_busy = self.slots_busy
+
+    def _preempt(self) -> bool:
+        """Ask the policy which residents lose their slot this step and
+        evict them back to the queue (loop thread only).  FIFO never
+        names victims, so this is a no-op on the default path."""
+        with self._lock:
+            now = self.clock()
+            residents = [h for h in self._slots if h is not None]
+            victims = self.scheduler.victims(residents, now)
+        for handle in victims:
+            self._requeue(handle)
+        return bool(victims)
+
+    def _requeue(self, handle: RequestHandle) -> None:
+        """Evict a resident back to the admission queue (preemption).
+
+        The slot and its KV blocks free immediately; the handle records
+        how many tokens were already generated (``resumed``) so
+        re-admission teacher-forces them as part of the prefix and
+        sampling resumes at the same fold-in index — the final stream is
+        bit-exact vs an uninterrupted run."""
+        b, handle.slot = handle.slot, None
+        self._slots[b] = None
+        self._chunks.pop(b, None)
+        self._pledged.pop(b, None)
+        self._pos[b] = 0
+        self._next_input[b] = 0
+        if self.paged:
+            self.session.free_slot(b)
+        handle.status = RequestStatus.QUEUED
+        handle.resumed = len(handle.tokens)
+        handle.preemptions += 1
+        with self._lock:
+            self.stats.preemptions += 1
+            self.stats.requeues += 1
+            self.scheduler.requeue(handle, self.clock())
+            self._note_queue()
 
     def _admit(self) -> set[int]:
-        """FIFO admission: prefill queued requests into free slots.
-        Returns the slot indices admitted this call.
+        """Policy-ordered admission: prefill queued requests into free
+        slots.  Returns the slot indices admitted this call.
 
-        Paged engines are pool-occupancy-aware: the head of the queue is
-        admitted only when the pool currently has blocks for its *whole*
-        prompt, so admissions do not immediately die of pool exhaustion
-        mid-chunk (resident decodes can still exhaust the pool later —
-        that path finishes the growing request with ``kv_capacity``).
-        FIFO is preserved: a too-big head blocks the queue until
-        completions free blocks, rather than being overtaken.
+        Paged engines are pool-occupancy-aware: the policy's next pick
+        is admitted only when the pool currently has blocks for its
+        *whole* prefix, so admissions do not immediately die of pool
+        exhaustion mid-chunk (resident decodes can still exhaust the
+        pool later — that path finishes the growing request with
+        ``kv_capacity``).  Ordering is preserved: a too-big head blocks
+        the queue until completions free blocks, rather than being
+        overtaken.
         """
         admitted: set[int] = set()
-        while self._queue:
+        while True:
             free = next((b for b, h in enumerate(self._slots) if h is None), None)
             if free is None:
                 break
-            if self.paged:
-                need = blocks_for_rows(len(self._queue[0].prompt),
-                                       self.session.kv_block_size)
-                unclaimed = sum(
-                    max(0, pledge - self.session.blocks_held(b))
-                    for b, pledge in self._pledged.items()
-                )
-                if self.session.blocks_free - unclaimed < need:
+            with self._lock:
+                now = self.clock()
+                cand = self.scheduler.peek(now)
+                if cand is None:
                     break
-            handle = self._queue.popleft()
+                if self.paged:
+                    need = blocks_for_rows(len(cand.prefix()),
+                                           self.session.kv_block_size)
+                    if need > self.session.kv_blocks:
+                        # a requeued prefix grew past what the whole pool
+                        # can ever hold — finish it (kv_capacity) instead
+                        # of blocking the queue forever
+                        self.scheduler.remove(cand)
+                        self._finish(cand, "kv_capacity")
+                        continue
+                    unclaimed = sum(
+                        max(0, pledge - self.session.blocks_held(b))
+                        for b, pledge in self._pledged.items()
+                    )
+                    if self.session.blocks_free - unclaimed < need:
+                        break
+                handle = self.scheduler.pop(now)
             handle.slot = free
             handle.status = RequestStatus.PREFILLING
             self._slots[free] = handle
             if free in self._used_slots:
                 self.stats.slots_recycled += 1
             self._used_slots.add(free)
+            prefix = handle.prefix()
             if self.paged:
                 # parked out of the decode lanes; the first chunk rides
                 # this step's batched _advance_chunks dispatch
-                self._chunks[free] = chunk_starts(len(handle.prompt),
-                                                  self.seq_len)
+                self._chunks[free] = chunk_starts(len(prefix), self.seq_len)
                 self._pledged[free] = need
                 self._pos[free] = 0
             else:
-                head = jnp.asarray(handle.prompt[: self.seq_len], jnp.int32)[None]
+                head = jnp.asarray(prefix[: self.seq_len], jnp.int32)[None]
                 t0 = time.perf_counter()
                 logits = self.session.prefill_slot(free, head)
                 jax.block_until_ready(logits)
@@ -577,7 +817,7 @@ class Engine:
                 # non-multiple prompt lengths
                 prev_rows[b] = 0 if start == 0 else int(self.session.pos[b])
                 chunk = jnp.asarray(
-                    self._slots[b].prompt[start : start + self.seq_len],
+                    self._slots[b].prefix()[start : start + self.seq_len],
                     jnp.int32)[None]
                 pending[b] = (chunk, start)
             if not pending:
@@ -612,7 +852,7 @@ class Engine:
                     continue
                 del self._chunks[b]
                 self._pledged.pop(b, None)
-                self._pos[b] = len(self._slots[b].prompt)
+                self._pos[b] = len(self._slots[b].prefix())
                 if final_rows is None:
                     # ONE device->host fetch covers every slot that
                     # finishes chunking this step
@@ -622,19 +862,40 @@ class Engine:
 
     def _consume_logits(self, b: int, logits_row) -> None:
         """Turn slot ``b``'s fresh logits (predicting token index
-        ``self._pos[b]``) into its next decode input: the next prompt
-        token while prefilling, a sampled token once generating."""
+        ``self._pos[b]``) into its next decode input: the next prefix
+        token while prefilling, a sampled token once generating.
+
+        The *prefix* is the prompt plus any tokens generated before a
+        preemption (``handle.resumed``): those are teacher-forced, never
+        re-sampled and never re-streamed, and sampling resumes at the
+        same ``len(tokens)`` fold-in index — bit-exact vs an
+        uninterrupted run."""
         handle = self._slots[b]
         depth = self._pos[b]
-        if depth < len(handle.prompt):
-            # teacher-force the prompt tail through the batched decode path
-            self._next_input[b] = handle.prompt[depth]
+        forced_len = len(handle.prompt) + handle.resumed
+        if depth < forced_len:
+            # teacher-force the prefix tail through the batched decode path
+            if depth < len(handle.prompt):
+                self._next_input[b] = handle.prompt[depth]
+            else:
+                self._next_input[b] = handle.tokens[depth - len(handle.prompt)]
             self.stats.prompt_tokens_forced += 1
             return
         tok = int(self.sampling(logits_row, handle.rid, len(handle.tokens)))
         handle.status = RequestStatus.DECODING
         handle.tokens.append(tok)
-        self.stats.tokens_generated += 1
+        now = self.clock()
+        with self._lock:
+            self.stats.tokens_generated += 1
+            if handle.first_token_t is None:
+                handle.first_token_t = now
+                self.stats.ttft_s.append(handle.ttft_s)
+                if handle.ttft_slo_ms is not None:
+                    self.stats._slo_outcomes.append(
+                        handle.ttft_s <= handle.ttft_slo_ms / 1e3)
+            else:
+                self.stats.tpot_s.append(now - handle._last_token_t)
+            handle._last_token_t = now
         if handle.on_token is not None:
             handle.on_token(tok)
             if handle.done:  # the callback cancelled this very request
@@ -652,6 +913,7 @@ class Engine:
             return
         handle.finish_reason = reason
         handle.status = status
+        handle.finish_t = self.clock()
         if handle.slot is not None:
             b, handle.slot = handle.slot, None
             self._slots[b] = None

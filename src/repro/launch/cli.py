@@ -90,6 +90,39 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                     help="PRNG seed for --sampling temperature")
 
 
+def add_serving_args(ap: argparse.ArgumentParser) -> None:
+    """Install the shared scheduler-policy argument block.
+
+    One surface for ``serve.py``, ``python -m repro.deploy.serving`` and
+    the throughput benchmark: ``--scheduler`` names a policy from
+    :data:`repro.deploy.serving.scheduler.POLICIES`, ``--max-queue``
+    bounds admission (shed with 429/``QueueFullError`` past it),
+    ``--aging-s`` tunes priority aging (priority-deadline only).
+    """
+    from repro.deploy.serving.scheduler import POLICIES
+
+    ap.add_argument("--scheduler", choices=tuple(POLICIES), default="fifo",
+                    help="admission policy (fifo = historical behavior; "
+                         "priority-deadline = SLO-aware ordering, preemption "
+                         "and load shedding)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue; submissions past it are "
+                         "shed with retry-after backpressure (default: "
+                         "unbounded)")
+    ap.add_argument("--aging-s", type=float, default=None,
+                    help="priority-deadline aging interval: a queued request "
+                         "gains one priority level per this many seconds "
+                         "waited (starvation-freedom)")
+
+
+def make_scheduler_from_args(args):
+    """Build the engine scheduler policy from the shared argument block."""
+    from repro.deploy.serving.scheduler import make_scheduler
+
+    return make_scheduler(args.scheduler, max_queue=args.max_queue,
+                          aging_s=args.aging_s)
+
+
 def make_sampling(args):
     """Build the engine sampling policy from the shared argument block."""
     from repro.deploy.engine import Greedy, Temperature
@@ -106,6 +139,53 @@ def resolve_requests(args, *, factor: int = 2) -> int:
     outrunning the slot count so eviction + recycling genuinely happen
     (serve/example use 2x; the throughput benchmark asks for 3x)."""
     return args.requests if args.requests is not None else factor * args.batch
+
+
+def http_generate(host: str, port: int, prompt, max_new_tokens: int, *,
+                  stream: bool = True, timeout: float = 60.0, **slo):
+    """Stdlib client for the serving frontend's ``POST /v1/generate``.
+
+    Streaming (default) returns an iterator of decoded JSON-lines events
+    — ``{"token": t, "index": i}`` per sampled token, then the final
+    ``{"done": true, ...}`` summary.  Unary returns the summary dict.
+    Extra keyword args (``priority``, ``ttft_slo_ms``, ``deadline_ms``,
+    ``eos_id``) pass straight through to the request body.  HTTP errors
+    surface as ``urllib.error.HTTPError`` — a shed request is ``429``
+    with a ``Retry-After`` header and a structured JSON body.
+    """
+    import json as _json
+    import urllib.request
+
+    body = {"prompt": list(prompt), "max_new_tokens": int(max_new_tokens),
+            "stream": stream, **{k: v for k, v in slo.items() if v is not None}}
+    req = urllib.request.Request(
+        f"http://{host}:{port}/v1/generate",
+        data=_json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    resp = urllib.request.urlopen(req, timeout=timeout)
+    if not stream:
+        with resp:
+            return _json.loads(resp.read().decode())
+
+    def events():
+        with resp:
+            for line in resp:
+                if line.strip():
+                    yield _json.loads(line.decode())
+
+    return events()
+
+
+def http_get_json(host: str, port: int, path: str, *,
+                  timeout: float = 10.0) -> dict:
+    """Fetch one JSON endpoint (``/v1/stats``, ``/v1/status/<rid>``,
+    ``/healthz``) from the serving frontend."""
+    import json as _json
+    import urllib.request
+
+    with urllib.request.urlopen(f"http://{host}:{port}{path}",
+                                timeout=timeout) as resp:
+        return _json.loads(resp.read().decode())
 
 
 def synthesize_prompts(vocab: int, *, n: int, prompt_len: int, extra: int = 0,

@@ -88,14 +88,16 @@ def serve_encoder(model, *, batch_size: int, steps: int) -> None:
 
 
 def serve_decoder(model, *, max_batch: int, requests: int, prompt_len: int,
-                  extra_prompt: int, gen: int, sampling) -> None:
+                  extra_prompt: int, gen: int, sampling,
+                  scheduler=None) -> None:
     """Request-level serving: submit → schedule → stream, engine-only."""
     from repro.deploy.engine import Engine
     from repro.launch.cli import synthesize_prompts
 
     pair = model.artifact
     t0 = time.time()
-    engine = Engine(model, max_batch=max_batch, sampling=sampling)
+    engine = Engine(model, max_batch=max_batch, sampling=sampling,
+                    scheduler=scheduler)
     prompts = synthesize_prompts(model.cfg.vocab, n=requests,
                                  prompt_len=prompt_len, extra=extra_prompt)
     handles = [engine.submit(p, max_new_tokens=gen) for p in prompts]
@@ -124,7 +126,9 @@ def main(argv=None):
     from repro.launch.cli import (
         add_engine_args,
         add_plan_args,
+        add_serving_args,
         make_sampling,
+        make_scheduler_from_args,
         resolve_requests,
     )
 
@@ -135,6 +139,7 @@ def main(argv=None):
                     help="stagger prompt lengths up to this many tokens past "
                          "--prompt-len (teacher-forced through batched decode)")
     add_engine_args(ap)
+    add_serving_args(ap)
     add_plan_args(ap, via_plan_help="accepted for compatibility; serving is "
                   "always plan-backed (compile() -> Engine/InferenceSession)")
     args = ap.parse_args(argv)
@@ -156,6 +161,7 @@ def main(argv=None):
         extra_prompt=args.extra_prompt,
         gen=args.gen,
         sampling=make_sampling(args),
+        scheduler=make_scheduler_from_args(args),
     )
 
 

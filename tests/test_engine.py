@@ -185,6 +185,30 @@ class TestKVCapacityEviction:
         with pytest.raises(ValueError, match="max_new_tokens"):
             engine.submit([1] * SEQ, 0)
 
+    def test_submit_rejects_empty_prompt(self, olmo):
+        """Regression (ISSUE 8): ``submit([])`` used to fall through to
+        the generic short-prompt message; it is its own structured
+        refusal now, and no engine state changes."""
+        cfg, params = olmo
+        engine = Engine(_compile(cfg), 1, params=params)
+        with pytest.raises(ValueError, match="empty prompt"):
+            engine.submit([], 2)
+        assert engine.stats.requests_submitted == 0 and engine.idle
+
+    def test_submit_rejects_prompt_larger_than_paged_pool(self, olmo):
+        """Regression (ISSUE 8): a prompt needing more KV blocks than
+        the whole paged pool is refused at submit time with a structured
+        ``KVCapacityError(reason="pool")`` — it used to be accepted and
+        then die (or stall admission) inside the step loop."""
+        cfg, params = olmo
+        model = api.compile(cfg, backend="w8a8", seq_len=SEQ, max_len=40,
+                            use_cache=False, kv_block_size=4, kv_blocks=4)
+        engine = Engine(model, 1, params=params)
+        with pytest.raises(api.KVCapacityError, match="pool holds") as ei:
+            engine.submit([1] * 20, 2)  # needs 5 blocks; the pool has 4
+        assert ei.value.reason == "pool"
+        assert engine.stats.requests_submitted == 0 and engine.idle
+
 
 class TestDeterminism:
     def test_greedy_across_batch_orderings(self, olmo):

@@ -462,3 +462,91 @@ class TestVerifierProperties:
         rules = {d.rule for d in verify_plan(plan)
                  if d.severity == "error"}
         assert rules & {"DF001", "DF003"}
+
+
+def _sched_handle(rid, priority, ttft_slo_ms, deadline_ms, arrival_t):
+    """Minimal object satisfying the Scheduler handle contract."""
+    from repro.deploy.serving.scheduler import effective_deadline
+
+    class H:
+        pass
+
+    h = H()
+    h.rid = rid
+    h.priority = priority
+    h.ttft_slo_ms = ttft_slo_ms
+    h.deadline_ms = deadline_ms
+    h.arrival_t = arrival_t
+    h.deadline_t = (None if deadline_ms is None
+                    else arrival_t + deadline_ms / 1e3)
+    h.admit_deadline_t = effective_deadline(arrival_t, ttft_slo_ms,
+                                            deadline_ms)
+    return h
+
+
+_handle_st = st.builds(
+    _sched_handle,
+    rid=st.integers(0, 10_000),
+    priority=st.integers(-5, 20),
+    ttft_slo_ms=st.none() | st.floats(0.0, 1e5, allow_nan=False),
+    deadline_ms=st.none() | st.floats(0.0, 1e5, allow_nan=False),
+    arrival_t=st.floats(0.0, 1e4, allow_nan=False),
+)
+
+
+class TestSchedulerProperties:
+    @given(hs=st.lists(_handle_st, min_size=2, max_size=12,
+                       unique_by=lambda h: h.rid),
+           now=st.floats(0.0, 2e4, allow_nan=False))
+    @settings(max_examples=80, deadline=None)
+    def test_property_key_is_strict_total_order(self, hs, now):
+        """The PriorityDeadline sort key never ties on distinct rids
+        (the rid tiebreak makes it a strict total order), and popping
+        drains the queue in exactly sorted-key order."""
+        from repro.deploy.serving.scheduler import PriorityDeadline
+
+        s = PriorityDeadline(aging_s=3.0)
+        for h in hs:
+            s.add(h, now)
+        keys = [s.key(h, now) for h in hs]
+        assert len(set(keys)) == len(keys)
+        want = [h.rid for h in sorted(hs, key=lambda h: s.key(h, now))]
+        got = [s.pop(now).rid for _ in range(len(hs))]
+        assert got == want and s.pop(now) is None
+
+    @given(hs=st.lists(_handle_st, min_size=2, max_size=12,
+                       unique_by=lambda h: h.rid))
+    @settings(max_examples=80, deadline=None)
+    def test_property_order_matches_contract_when_aging_is_off(self, hs):
+        """With aging effectively disabled, the admitted order is exactly
+        lexicographic (priority, effective deadline, rid) — the
+        documented scheduler contract."""
+        from repro.deploy.serving.scheduler import PriorityDeadline
+
+        s = PriorityDeadline(aging_s=1e12)
+        now = max(h.arrival_t for h in hs)
+        for h in hs:
+            s.add(h, now)
+        want = [h.rid for h in
+                sorted(hs, key=lambda h: (h.priority, h.admit_deadline_t,
+                                          h.rid))]
+        assert [s.pop(now).rid for _ in range(len(hs))] == want
+
+    @given(old_priority=st.integers(0, 20),
+           fresh_priority=st.integers(0, 20),
+           aging_s=st.floats(0.1, 60.0, allow_nan=False))
+    @settings(max_examples=80, deadline=None)
+    def test_property_aging_guarantees_starvation_freedom(
+            self, old_priority, fresh_priority, aging_s):
+        """Any queued request eventually outranks ANY fresh arrival: by
+        ``(old_priority - fresh_priority + 1) * aging_s`` seconds of
+        waiting, the aged key is strictly smaller even against a fresh
+        request with a tight (earlier-deadline) SLO."""
+        from repro.deploy.serving.scheduler import PriorityDeadline
+
+        s = PriorityDeadline(aging_s=aging_s)
+        old = _sched_handle(0, old_priority, None, None, arrival_t=0.0)
+        wait = (max(0, old_priority - fresh_priority) + 1) * aging_s
+        now = wait * 1.0000001  # strictly past the promotion boundary
+        fresh = _sched_handle(1, fresh_priority, 1.0, None, arrival_t=now)
+        assert s.key(old, now) < s.key(fresh, now)
