@@ -125,7 +125,8 @@ def _closed_loop(args, model, prompts, n, make_sampling):
     print("mode,max_batch,requests,tokens,decode_dispatches,"
           "dispatches_per_step,step_p50_ms,step_p99_ms,occupancy,tok_per_s,"
           "ttft_p50_ms,ttft_p99_ms,tpot_p50_ms,tpot_p99_ms,"
-          "preemptions,requeues,shed,verify_ms")
+          "preemptions,requeues,shed,verify_ms,"
+          "prefix_hit_blocks,prefix_hit_rate,blocks_shared,cow_copies")
     rows = {}
     for mode, mb in (("serial", 1), ("continuous", args.batch)):
         stats, _ = _run_trace(model, prompts, max_batch=mb, gen=args.gen,
@@ -139,7 +140,11 @@ def _closed_loop(args, model, prompts, n, make_sampling):
               f"{stats.ttft(50) * 1e3:.2f},{stats.ttft(99) * 1e3:.2f},"
               f"{stats.tpot(50) * 1e3:.2f},{stats.tpot(99) * 1e3:.2f},"
               f"{stats.preemptions},{stats.requeues},{stats.shed_requests},"
-              f"{stats.verify_ms:.2f}")
+              f"{stats.verify_ms:.2f},"
+              # prefix-cache columns: all zero unless the artifact was
+              # compiled with prefix_cache=True (paged decoders only)
+              f"{stats.prefix_hit_blocks},{stats.prefix_hit_rate():.3f},"
+              f"{stats.blocks_shared},{stats.cow_copies}")
     serial, cont = rows["serial"], rows["continuous"]
     speedup = cont.tokens_per_s() / max(serial.tokens_per_s(), 1e-9)
     dispatch_ratio = serial.decode_dispatches / max(cont.decode_dispatches, 1)

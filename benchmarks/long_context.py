@@ -17,8 +17,17 @@ measures both effects on the same request trace:
   schedules where the dense engine teacher-forces ``len - seq_len``
   extra decode dispatches.
 
+``--shared-prefix`` switches the trace to N requests sharing ONE long
+system prompt and compares the paged engine against itself with the
+radix prefix cache on (``compile(..., prefix_cache=True)``): the first
+request prefills the prompt once, the rest attach its resident blocks
+(zero-prefill full hits) — near-zero suffix prefill tokens and a pool
+that effectively holds many more requests than its block budget.
+
 Run:  PYTHONPATH=src python benchmarks/long_context.py --prompt-factor 4
       PYTHONPATH=src python benchmarks/long_context.py --smoke --csv out.csv
+      PYTHONPATH=src python benchmarks/long_context.py --shared-prefix \\
+          --requests 8 --prompt-factor 4
 """
 
 from __future__ import annotations
@@ -40,21 +49,27 @@ def kv_region_bytes(cfg, model, max_batch: int) -> int:
     return 2 * cfg.n_layers * max_batch * cfg.n_kv_heads * pair.max_len * cfg.head_dim
 
 
-def run_trace(model, prompts, *, max_batch: int, gen: int):
+def run_trace(model, prompts, *, max_batch: int, gen: int, warmup=None):
     from repro.deploy.engine import Engine, RequestStatus
 
     engine = Engine(model, max_batch=max_batch)
     # warm-up: compile prefill/decode outside the timed trace.  Two
     # tokens, not one: a chunk-prefilled request that stops after its
     # first sample never dispatches a decode, which would push the decode
-    # compile into the timed trace.
-    engine.submit(prompts[0], max_new_tokens=2)
+    # compile into the timed trace.  ``warmup`` lets the shared-prefix
+    # mode warm with a DISTINCT prompt so the timed trace's first request
+    # still pays the real (one-time) prefill, keeping the comparison
+    # honest instead of pre-seeding the index.
+    engine.submit(warmup if warmup is not None else prompts[0],
+                  max_new_tokens=2)
     engine.run_until_idle()
     engine.reset_stats()
     handles = [engine.submit(p, max_new_tokens=gen) for p in prompts]
     stats = engine.run_until_idle(max_steps=100_000)
     assert all(h.status is RequestStatus.DONE for h in handles)
     finished = sum(h.finish_reason == "length" for h in handles)
+    if engine.paged:
+        engine.audit_sharing()  # refcount/COW invariants stayed clean
     return stats, finished
 
 
@@ -79,6 +94,10 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="pool budget (default: 1.5 long prompts' worth — "
                          "deliberately far below max_batch * max_len rows)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="all requests share ONE long system prompt; "
+                         "compare the paged engine with and without the "
+                         "radix prefix cache instead of dense vs paged")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed shape for CI (implies reduced config)")
     ap.add_argument("--csv", default=None, metavar="FILE",
@@ -98,40 +117,72 @@ def main(argv=None):
     kv_blocks = args.kv_blocks or (per_prompt + per_prompt // 2)
 
     key = jax.random.PRNGKey(0)
-    prompts = [
-        [int(t) for t in jax.random.randint(jax.random.fold_in(key, i),
-                                            (prompt_len,), 0, cfg.vocab,
-                                            jnp.int32)]
-        for i in range(args.requests)
-    ]
+
+    def rand_prompt(i, n=prompt_len):
+        return [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (n,), 0, cfg.vocab, jnp.int32)]
+
+    warmup = None
+    if args.shared_prefix:
+        # one long system prompt, every request verbatim — the prefix
+        # cache's best case and the unshared engine's worst.  Warm up on
+        # a DIFFERENT prompt so the timed trace still pays one real
+        # prefill (see run_trace).
+        shared = rand_prompt(0)
+        prompts = [list(shared) for _ in range(args.requests)]
+        warmup = rand_prompt(10_000)
+        modes = ("paged", "paged+prefix")
+    else:
+        prompts = [rand_prompt(i) for i in range(args.requests)]
+        modes = ("dense", "paged")
 
     rows = ["mode,requests,prompt_len,seq_len,kv_bytes,prefill_dispatches,"
-            "decode_dispatches,gen_tok_per_s,prompt_tok_per_s,finished"]
+            "decode_dispatches,gen_tok_per_s,prompt_tok_per_s,finished,"
+            "prefill_tokens,prefix_hit_blocks,prefix_hit_rate,"
+            "blocks_shared,cow_copies"]
     results = {}
-    for mode in ("dense", "paged"):
+    for mode in modes:
         kw = dict(backend=args.backend, seq_len=seq, max_len=max_len,
                   use_cache=False)
-        if mode == "paged":
+        if mode != "dense":
             kw.update(kv_block_size=block, kv_blocks=kv_blocks)
+        if mode == "paged+prefix":
+            kw.update(prefix_cache=True)
         model = api.compile(cfg, **kw)
         stats, finished = run_trace(model, prompts, max_batch=args.batch,
-                                    gen=args.gen)
+                                    gen=args.gen, warmup=warmup)
         bytes_ = kv_region_bytes(cfg, model, args.batch)
-        results[mode] = (stats, bytes_)
+        results[mode] = (stats, bytes_, finished)
+        prefill_tokens = (stats.prompt_tokens_prefilled
+                          + stats.prompt_tokens_forced)
         rows.append(
             f"{mode},{args.requests},{prompt_len},{seq},{bytes_},"
             f"{stats.prefill_dispatches},{stats.decode_dispatches},"
             f"{stats.tokens_per_s():.1f},{stats.prompt_tokens_per_s():.1f},"
-            f"{finished}"
+            f"{finished},{prefill_tokens},{stats.prefix_hit_blocks},"
+            f"{stats.prefix_hit_rate():.3f},{stats.blocks_shared},"
+            f"{stats.cow_copies}"
         )
     for r in rows:
         print(r)
-    dense, paged = results["dense"], results["paged"]
-    shrink = dense[1] / max(paged[1], 1)
-    disp = dense[0].decode_dispatches / max(paged[0].decode_dispatches, 1)
-    print(f"# paged KV region: {shrink:.1f}x smaller static arena, "
-          f"{disp:.1f}x fewer decode dispatches at {args.prompt_factor}x "
-          f"seq_len prompts (chunked prefill replaces teacher forcing)")
+    if args.shared_prefix:
+        base, pfx = results["paged"][0], results["paged+prefix"][0]
+        base_tok = base.prompt_tokens_prefilled + base.prompt_tokens_forced
+        pfx_tok = pfx.prompt_tokens_prefilled + pfx.prompt_tokens_forced
+        ratio = base_tok / max(pfx_tok, 1)
+        print(f"# prefix cache: {ratio:.1f}x fewer prefill tokens "
+              f"({base_tok} -> {pfx_tok}) for {args.requests} requests "
+              f"sharing a {args.prompt_factor}x seq_len prompt; "
+              f"{pfx.full_prefix_hits} zero-prefill full hits, "
+              f"{results['paged+prefix'][2]} vs {results['paged'][2]} "
+              f"finished on the same {kv_blocks}-block pool")
+    else:
+        dense, paged = results["dense"], results["paged"]
+        shrink = dense[1] / max(paged[1], 1)
+        disp = dense[0].decode_dispatches / max(paged[0].decode_dispatches, 1)
+        print(f"# paged KV region: {shrink:.1f}x smaller static arena, "
+              f"{disp:.1f}x fewer decode dispatches at {args.prompt_factor}x "
+              f"seq_len prompts (chunked prefill replaces teacher forcing)")
     if args.csv:
         with open(args.csv, "w") as f:
             f.write("\n".join(rows) + "\n")

@@ -31,6 +31,13 @@ HTTP (``python -m repro.deploy.serving``).
 hazards, KV ordering, quant ranges and engine legality are audited on
 every ``compile()`` (and via ``python -m repro.deploy.verify`` for
 artifacts on disk).
+
+``prefix`` adds cross-request KV reuse over the paged pool: a radix
+index (``PrefixIndex``) maps shared prompt prefixes to resident,
+refcounted blocks; the engine attaches matches copy-on-write and
+prefills only the novel suffix (``compile(cfg, ...,
+prefix_cache=True)``).  ``verify.check_sharing`` audits the live pool's
+refcount/COW invariants (rules KV006/KV007).
 """
 
 from repro.deploy import (  # noqa: F401
@@ -45,6 +52,7 @@ from repro.deploy import (  # noqa: F401
     paging,
     patterns,
     plan,
+    prefix,
     serving,
     tiler,
     verify,
@@ -63,6 +71,10 @@ from repro.deploy.paging import (  # noqa: F401
     BlockAllocator,
     chunk_starts,
 )
+from repro.deploy.prefix import (  # noqa: F401
+    PrefixIndex,
+    PrefixMatch,
+)
 from repro.deploy.engine import (  # noqa: F401
     Engine,
     EngineStats,
@@ -74,9 +86,13 @@ from repro.deploy.engine import (  # noqa: F401
 from repro.deploy.executor import PlanBindingError  # noqa: F401
 from repro.deploy.memory import MemoryPlanError  # noqa: F401
 from repro.deploy.verify import (  # noqa: F401
+    KVSharingState,
+    KVWrite,
     PlanDiagnostic,
     PlanVerificationError,
     check,
+    check_sharing,
     verify_pair,
     verify_plan,
+    verify_sharing,
 )

@@ -96,8 +96,12 @@ class KVCapacityError(ValueError):
       slot's depth reached the compiled ``max_len``.
     * ``reason == "pool"`` — paged region only: the shared block pool is
       exhausted; ``slots`` are the requests that could not grow and
-      ``evictable`` names the *other* live slots currently holding pool
-      blocks (the candidates whose eviction frees capacity).
+      ``evictable`` names the *other* live slots whose eviction would
+      actually free capacity — slots holding at least one exclusively
+      owned block.  A slot whose blocks are ALL shared (refcount > 1:
+      a prefix-cache sibling or the index still references every one)
+      is excluded: evicting it only decrements refcounts and returns
+      nothing to the pool.
 
     Attributes: ``slots`` (tuple of offending slot indices), ``pos``
     (their per-slot depths, same order), ``max_len`` (the region's
@@ -415,6 +419,7 @@ def compile(  # noqa: A001 — torch.compile precedent
     include_head: bool = True,
     fuse: bool = True,
     autotune: bool = False,
+    prefix_cache: bool = False,
     cache_dir: str | None = None,
     use_cache: bool = True,
     verify: bool = True,
@@ -459,6 +464,16 @@ def compile(  # noqa: A001 — torch.compile precedent
     the disk entirely.  Raises :class:`UnsupportedFamilyError` for
     families the flow cannot lower yet.
 
+    ``prefix_cache=True`` (decoder + paged only) declares the artifact
+    will be served with the radix prefix cache
+    (:mod:`repro.deploy.prefix`): the engine indexes finished prompt
+    prefills, matches new submissions against resident block chains, and
+    admits only the novel suffix.  The knob changes no plan content —
+    sharing is block-table bookkeeping — but it *is* a serving-semantics
+    option, so it enters the options dict and the fingerprint like any
+    other lowering option (a prefix-cached artifact caches separately
+    from an unshared one).
+
     ``verify=True`` (the default) runs the static plan verifier
     (:mod:`repro.deploy.verify`) over the artifact — freshly lowered OR
     cache-loaded (a cache hit deserializes bytes from disk; those bytes
@@ -495,6 +510,12 @@ def compile(  # noqa: A001 — torch.compile precedent
             f"boundary, decode GEMM tiles); {cfg.name} does not lower to a "
             "decoder plan pair"
         )
+    if prefix_cache and not (is_decoder and nb):
+        raise ValueError(
+            "prefix_cache needs a paged decoder artifact: prefix sharing "
+            "forks per-slot block-table entries, so compile with "
+            "kv_block_size/kv_blocks on a decoder config"
+        )
     cap = (max_len or s + 1) if is_decoder else 0
     tuned = None
     fuse_min_nodes = 2
@@ -518,6 +539,7 @@ def compile(  # noqa: A001 — torch.compile precedent
         "head_by_head": head_by_head,
         "include_head": include_head,
         "fuse": fuse,
+        "prefix_cache": bool(prefix_cache),
     }
     if autotune:
         # the *resolved* knobs key the cache: same (config, options) ->
@@ -645,6 +667,16 @@ class InferenceSession:
                 self._slot_blocks: list[list[int]] = [
                     [] for _ in range(batch_size)
                 ]
+                # copy-on-write: one jitted whole-block pool copy with
+                # *traced* src/dst indices, so every COW reuses the same
+                # executable instead of retracing per block id
+                self._copy_fn = jax.jit(
+                    lambda p, src, dst: {
+                        "k": p["k"].at[:, dst].set(p["k"][:, src]),
+                        "v": p["v"].at[:, dst].set(p["v"][:, src]),
+                    }
+                )
+                self._cow_copies = 0
             else:
                 self._prefill_fn = jax.jit(
                     lambda w, b: execute_prefill(pair, w, b, backend=be, table=tb)
@@ -760,6 +792,30 @@ class InferenceSession:
         if not 0 <= slot < self.batch_size:
             raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
         return len(self._slot_blocks[slot]) if self._pair.paged else 0
+
+    def block_chain(self, slot: int) -> tuple[int, ...]:
+        """One slot's physical block chain in logical row order (empty
+        for dense sessions or a freed slot)."""
+        self._require("decoder", "block_chain")
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        if not self._pair.paged:
+            return ()
+        return tuple(int(b) for b in self._tables[slot]
+                     if b != SCRATCH_BLOCK)
+
+    @property
+    def allocator(self) -> BlockAllocator | None:
+        """The paged session's block allocator (None for dense) — the
+        refcount surface the prefix index and the engine share."""
+        self._require("decoder", "allocator")
+        return self._alloc if self._pair.paged else None
+
+    @property
+    def cow_copies(self) -> int:
+        """Copy-on-write block copies materialized so far (paged)."""
+        self._require("decoder", "cow_copies")
+        return self._cow_copies if self._pair.paged else 0
 
     @property
     def pos(self):
@@ -921,6 +977,7 @@ class InferenceSession:
             raise KVCapacityError([slot], [start], self._pair.max_len)
         need = blocks_for_rows(start + s, self._pair.kv_block_size)
         self._grow_table(slot, need)
+        self._cow_range(slot, start, start + s)
         logits, self._pool = self._chunk_fn(
             self.weights, self._pool, tokens, jnp.int32(start),
             jnp.asarray(self._tables[slot : slot + 1]),
@@ -990,6 +1047,12 @@ class InferenceSession:
         for slot, (_, start) in checked.items():
             self._grow_table(slot, blocks_for_rows(start + s,
                                                    self._pair.kv_block_size))
+        for slot, (_, start) in checked.items():
+            # a suffix chunk overlapping an attached shared prefix (the
+            # pinned tail chunk of a near-full match) re-writes identical
+            # rows — bit-neutral, but still a write: COW keeps the
+            # no-write-into-shared-blocks invariant unconditional
+            self._cow_range(slot, start, start + s)
         batch_tokens = np.zeros((self.batch_size, s), np.int32)
         starts = np.zeros((self.batch_size,), np.int32)
         # parked lanes write through all-scratch tables — handing them
@@ -1021,6 +1084,75 @@ class InferenceSession:
         if self._pos is not None:
             self._pos[slot] = 0
 
+    def attach_prefix(self, slot: int, blocks, rows: int) -> None:
+        """Install a shared prefix into a *free* slot (paged only).
+
+        ``blocks`` is a resident block chain (e.g. a
+        :class:`~repro.deploy.prefix.PrefixIndex` match) covering cache
+        rows ``[0, rows)`` in logical order.  Every block is
+        :meth:`~repro.deploy.paging.BlockAllocator.fork`-ed — refcount
+        + 1, zero data movement — into the slot's table, and the slot's
+        depth starts at ``rows``: chunked prefill then only runs on the
+        novel suffix (``prefill_chunk(start >= rows - seq_len)``), or,
+        on a full-prompt match, decode starts immediately.  The first
+        write into any still-shared block copy-on-writes it
+        (:meth:`_cow_range`), so siblings and the index never observe
+        the attach.  :meth:`free_slot` releases the forked references
+        like any other blocks.
+        """
+        self._require("decoder", "attach_prefix")
+        self._affine("attach_prefix")
+        if not self._pair.paged:
+            raise RuntimeError(
+                "attach_prefix needs a paged session; compile with "
+                "kv_block_size/kv_blocks")
+        if not 0 <= slot < self.batch_size:
+            raise IndexError(f"slot {slot} out of range [0, {self.batch_size})")
+        if self._pos is None:
+            self._pos = np.zeros((self.batch_size,), np.int32)
+        if self._slot_blocks[slot] or int(self._pos[slot]) != 0:
+            raise RuntimeError(
+                f"attach_prefix into live slot {slot} (pos "
+                f"{int(self._pos[slot])}, {len(self._slot_blocks[slot])} "
+                f"blocks held); free_slot it first")
+        chain = [int(b) for b in blocks]
+        rows = int(rows)
+        if not 1 <= rows <= self._pair.max_len:
+            raise ValueError(
+                f"attach_prefix rows must be in [1, {self._pair.max_len}], "
+                f"got {rows}")
+        if len(chain) != blocks_for_rows(rows, self._pair.kv_block_size):
+            raise ValueError(
+                f"{rows} prefix rows cover "
+                f"{blocks_for_rows(rows, self._pair.kv_block_size)} blocks "
+                f"of size {self._pair.kv_block_size}, got a chain of "
+                f"{len(chain)}")
+        self._alloc.fork(chain, owner=slot)  # loud on any dead block
+        for i, blk in enumerate(chain):
+            self._tables[slot, i] = blk
+        self._slot_blocks[slot] = chain
+        self._pos[slot] = rows
+
+    def sharing_state(self, index_blocks=()) -> "KVSharingState":
+        """Snapshot of the pool's sharing structure for the KV-sharing
+        audit (:func:`repro.deploy.verify.verify_sharing`): live block
+        tables, per-block refcounts, and (caller-supplied) the prefix
+        index's pinned blocks."""
+        self._require("decoder", "sharing_state")
+        if not self._pair.paged:
+            raise RuntimeError("sharing_state needs a paged session")
+        from repro.deploy.verify import KVSharingState
+
+        return KVSharingState(
+            n_blocks=self._pair.kv_blocks,
+            refcounts={b: self._alloc.refcount(b)
+                       for b in range(1, self._pair.kv_blocks + 1)
+                       if self._alloc.refcount(b) > 0},
+            tables={b: self.block_chain(b) for b in range(self.batch_size)
+                    if self._slot_blocks[b]},
+            index_blocks=tuple(int(b) for b in index_blocks),
+        )
+
     # -- paged internals ---------------------------------------------------
 
     def _release_blocks(self, slot: int) -> None:
@@ -1028,6 +1160,25 @@ class InferenceSession:
             self._alloc.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
         self._tables[slot, :] = SCRATCH_BLOCK
+
+    def _pool_capacity_error(self, slot: int) -> KVCapacityError:
+        """Structured pool-exhaustion error for ``slot``, naming only the
+        slots whose eviction would *actually* return blocks to the pool:
+        holders of at least one exclusively owned (refcount == 1) block.
+        A slot whose blocks are all shared contributes nothing when
+        evicted — freeing it just decrements its siblings' refcounts —
+        so reporting it evictable would let a scheduler churn evictions
+        that can never make progress (and corrupt nothing, but starve)."""
+        evictable = sorted(
+            b for b in range(self.batch_size)
+            if b != slot and any(self._alloc.refcount(blk) == 1
+                                 for blk in self._slot_blocks[b])
+        )
+        pos = 0 if self._pos is None else int(self._pos[slot])
+        return KVCapacityError(
+            [slot], [pos], self._pair.max_len, reason="pool",
+            evictable=evictable,
+        )
 
     def _grow_table(self, slot: int, need: int) -> None:
         """Allocate blocks until slot's table covers ``need`` logical
@@ -1040,18 +1191,38 @@ class InferenceSession:
         try:
             got = self._alloc.allocate(len(missing), owner=slot)
         except PoolExhausted:
-            evictable = sorted(
-                b for b in range(self.batch_size)
-                if b != slot and self._slot_blocks[b]
-            )
-            pos = 0 if self._pos is None else int(self._pos[slot])
-            raise KVCapacityError(
-                [slot], [pos], self._pair.max_len, reason="pool",
-                evictable=evictable,
-            ) from None
+            raise self._pool_capacity_error(slot) from None
         for i, blk in zip(missing, got):
             self._tables[slot, i] = blk
         self._slot_blocks[slot].extend(got)
+
+    def _cow_range(self, slot: int, lo: int, hi: int) -> None:
+        """Copy-on-write every *shared* block ``slot`` is about to write
+        in cache rows ``[lo, hi)`` — called before each write dispatch
+        (decode append, prefill chunk), so a request that attached a
+        shared prefix materializes a private copy before its first write
+        into a partially filled shared block.  Whole-block device copy
+        (bit-exact: int8 rows move verbatim), table + chain patched in
+        place; pool exhaustion raises the structured capacity error
+        before any state changes."""
+        if hi <= lo:
+            return
+        bsz = self._pair.kv_block_size
+        for i in range(lo // bsz, blocks_for_rows(hi, bsz)):
+            blk = int(self._tables[slot, i])
+            if blk == SCRATCH_BLOCK or self._alloc.refcount(blk) <= 1:
+                continue
+            try:
+                fresh, copied = self._alloc.cow(blk, owner=slot)
+            except PoolExhausted:
+                raise self._pool_capacity_error(slot) from None
+            assert copied, (slot, blk)
+            self._pool = self._copy_fn(self._pool, jnp.int32(blk),
+                                       jnp.int32(fresh))
+            self._tables[slot, i] = fresh
+            chain = self._slot_blocks[slot]
+            chain[chain.index(blk)] = fresh
+            self._cow_copies += 1
 
     def decode(self, tokens, pos=None, *, active=None):
         """One batched continuous-decode dispatch.
@@ -1122,6 +1293,12 @@ class InferenceSession:
             for b in range(self.batch_size):
                 if act[b] and int(pos[b]) % bs == 0:
                     self._grow_table(b, int(pos[b]) // bs + 1)
+            for b in range(self.batch_size):
+                if act[b]:
+                    # first append into a shared partial block (an
+                    # attached prefix whose tail block siblings/the index
+                    # still reference) materializes a private copy
+                    self._cow_range(b, int(pos[b]), int(pos[b]) + 1)
             logits, self._pool = self._decode_fn(
                 self.weights, self._pool, tokens, jnp.asarray(pos),
                 jnp.asarray(self._tables), jnp.asarray(act),

@@ -33,7 +33,18 @@ artifact:
 * **slot eviction + recycling** — a finished request's slot goes
   straight back to the admission queue's disposal;
 * **streaming** — an optional per-token callback on each handle fires
-  the moment a token is sampled.
+  the moment a token is sampled;
+* **prefix cache** (``compile(..., prefix_cache=True)``, paged only) —
+  finished prompt prefills are indexed in a radix trie
+  (:class:`~repro.deploy.prefix.PrefixIndex`); a new submission whose
+  prompt matches a resident chain forks those blocks into its table
+  (refcount + 1, zero data movement), prefills only the novel suffix
+  (an exact repeat skips prefill entirely — the cached last-token
+  logits row is sampled directly), and admission pledges pool blocks
+  for the *suffix only*.  Writes into still-shared blocks copy-on-write
+  first (the session's invariant), eviction never reports all-shared
+  slots evictable, and blocks referenced only by the index park in an
+  LRU reclaim list the engine drains before evicting anyone.
 
 Prompt lengths are *at least* the compiled prompt length ``S`` (the
 prefill schedule is static).  Dense KV region: the first ``S`` tokens go
@@ -251,6 +262,21 @@ class EngineStats:
     slots_busy: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+    # prefix cache (zero everywhere unless compile(prefix_cache=True)):
+    # lookups/hits count admissions, hit_blocks counts KV blocks served
+    # from the cache instead of re-prefilled, full_prefix_hits are
+    # zero-prefill admissions (exact prompt repeat, cached logits)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_blocks: int = 0
+    full_prefix_hits: int = 0
+    # peak number of pool blocks simultaneously referenced by >1 holder
+    blocks_shared: int = 0
+    # copy-on-write block copies materialized by the session (this
+    # engine's share since the last reset_stats)
+    cow_copies: int = 0
+    # parked (index-only) blocks LRU-reclaimed back to the pool
+    prefix_reclaimed_blocks: int = 0
     # top-level plan dispatches per decode step (len(decode.nodes)) — the
     # metric region fusion collapses (~5x on the reference decoders)
     dispatches_per_step: int = 0
@@ -295,6 +321,11 @@ class EngineStats:
 
     _slo_outcomes: list = dataclasses.field(default_factory=list)
 
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-cache lookups that matched at least one
+        resident block (0.0 when the cache is off or never consulted)."""
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
     def occupancy(self) -> float:
         """Mean fraction of slots doing real work per decode dispatch."""
         return self.slot_steps_busy / max(1, self.decode_dispatches * self.max_batch)
@@ -326,6 +357,14 @@ class EngineStats:
             slo += (f", {self.preemptions} preemptions / "
                     f"{self.requeues} requeues / "
                     f"{self.shed_requests} shed")
+        if self.prefix_lookups:
+            slo += (f", prefix cache {self.prefix_hits}/"
+                    f"{self.prefix_lookups} hits "
+                    f"({self.prefix_hit_blocks} blocks, "
+                    f"{self.full_prefix_hits} full, "
+                    f"{self.blocks_shared} peak shared, "
+                    f"{self.cow_copies} cow, "
+                    f"{self.prefix_reclaimed_blocks} reclaimed)")
         return (
             f"{self.requests_completed}/{self.requests_submitted} requests done "
             f"({self.requests_evicted} cancelled{slo}), "
@@ -418,6 +457,16 @@ class Engine:
         self.seq_len = self.session.seq_len
         self.max_len = self.session.max_len
         self.paged = self.session.paged
+        # radix prefix cache: opted in at compile time (the knob is part
+        # of the artifact's fingerprint), active only over a paged pool
+        self.prefix_index = None
+        opts = getattr(self.session.model, "options", None) or {}
+        if self.paged and opts.get("prefix_cache"):
+            from repro.deploy.prefix import PrefixIndex
+
+            self.prefix_index = PrefixIndex(self.session.allocator,
+                                            self.session.kv_block_size)
+        self._cow_base = 0  # session cow counter at the last reset_stats
         sampling = sampling if sampling is not None else Greedy()
         if getattr(sampling, "vocab", 0) is None:
             # bind an engine-local copy: a caller-shared policy must not be
@@ -588,6 +637,7 @@ class Engine:
         a warm-up pass, so a timed trace starts from a clean record."""
         self._used_slots = {b for b, h in enumerate(self._slots)
                             if h is not None}
+        self._cow_base = self.session.cow_copies if self.paged else 0
         self.stats = EngineStats(
             max_batch=self.max_batch,
             dispatches_per_step=self.session.decode_dispatch_count,
@@ -648,6 +698,8 @@ class Engine:
                 # it made long capacity-churny traces look faster than
                 # the wall clock (ISSUE 5)
                 self.stats.decode_time_s += time.perf_counter() - t0
+                if self._reclaim_parked(e, len(e.slots)):
+                    continue  # parked prefix blocks funded a retry
                 for b in e.slots:
                     if self._slots[b] is not None:
                         self._finish(self._slots[b], "kv_capacity")
@@ -691,6 +743,12 @@ class Engine:
             self.stats.peak_queue_depth = max(self.stats.peak_queue_depth,
                                               self.stats.queue_depth)
             self.stats.slots_busy = self.slots_busy
+            if self.paged:
+                self.stats.blocks_shared = max(
+                    self.stats.blocks_shared,
+                    self.session.allocator.n_shared)
+                self.stats.cow_copies = (self.session.cow_copies
+                                         - self._cow_base)
 
     def _preempt(self) -> bool:
         """Ask the policy which residents lose their slot this step and
@@ -752,22 +810,46 @@ class Engine:
                 cand = self.scheduler.peek(now)
                 if cand is None:
                     break
+                match, starts, need = None, None, 0
                 if self.paged:
-                    need = blocks_for_rows(len(cand.prefix()),
-                                           self.session.kv_block_size)
-                    if need > self.session.kv_blocks:
+                    prefix = cand.prefix()
+                    if blocks_for_rows(len(prefix),
+                                       self.session.kv_block_size) \
+                            > self.session.kv_blocks:
                         # a requeued prefix grew past what the whole pool
                         # can ever hold — finish it (kv_capacity) instead
                         # of blocking the queue forever
                         self.scheduler.remove(cand)
                         self._finish(cand, "kv_capacity")
                         continue
+                    match, starts, need = self._plan_admission(prefix)
+                    if (self.prefix_index is not None
+                            and not (match is not None and match.full)
+                            and self._inflight_covers(
+                                prefix, match.rows if match else 0)):
+                        # an identical/longer prompt is mid-prefill in a
+                        # resident slot: admitting now would duplicate its
+                        # work block for block, while waiting one step
+                        # turns this admission into a (possibly full)
+                        # prefix hit.  Ordering is preserved — the head
+                        # waits, nobody overtakes.
+                        break
                     unclaimed = sum(
                         max(0, pledge - self.session.blocks_held(b))
                         for b, pledge in self._pledged.items()
                     )
-                    if self.session.blocks_free - unclaimed < need:
-                        break
+                    short = need - (self.session.blocks_free - unclaimed)
+                    if short > 0:
+                        # drain the LRU parking lot before refusing: blocks
+                        # only the index references are capacity in waiting
+                        freed = 0
+                        if self.prefix_index is not None:
+                            freed = self.prefix_index.reclaim(
+                                short,
+                                protect=match.blocks if match else ())
+                            self.stats.prefix_reclaimed_blocks += freed
+                        if freed < short:
+                            break
                 handle = self.scheduler.pop(now)
             handle.slot = free
             handle.status = RequestStatus.PREFILLING
@@ -777,11 +859,26 @@ class Engine:
             self._used_slots.add(free)
             prefix = handle.prefix()
             if self.paged:
-                # parked out of the decode lanes; the first chunk rides
-                # this step's batched _advance_chunks dispatch
-                self._chunks[free] = chunk_starts(len(prefix), self.seq_len)
-                self._pledged[free] = need
-                self._pos[free] = 0
+                if self.prefix_index is not None:
+                    self.stats.prefix_lookups += 1
+                if match is not None and match.hit:
+                    self.session.attach_prefix(free, match.blocks, match.rows)
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_hit_blocks += len(match.blocks)
+                if match is not None and match.full:
+                    # zero-prefill admission: the whole prompt is resident
+                    # and the cached last-token logits row feeds sampling
+                    # directly — the slot enters the decode lanes this step
+                    self.stats.full_prefix_hits += 1
+                    self._pos[free] = match.rows
+                    self._consume_logits(free, match.logits)
+                else:
+                    # parked out of the decode lanes; the first (suffix)
+                    # chunk rides this step's batched _advance_chunks
+                    # dispatch.  The pledge covers the novel suffix only.
+                    self._chunks[free] = starts
+                    self._pledged[free] = need
+                    self._pos[free] = 0
             else:
                 head = jnp.asarray(prefix[: self.seq_len], jnp.int32)[None]
                 t0 = time.perf_counter()
@@ -794,6 +891,87 @@ class Engine:
                 self._consume_logits(free, jax.device_get(logits[0, -1]))
             admitted.add(free)
         return admitted
+
+    def _plan_admission(self, prefix: tuple[int, ...]):
+        """Paged admission plan for one candidate: ``(match, chunk
+        starts, blocks to pledge)``.
+
+        Without a prefix index this is the historical plan — full chunk
+        schedule, whole-prefix pledge.  With one, the pledge covers the
+        *novel suffix only*: total blocks minus the matched chain, plus
+        one block per shared block the first suffix chunk re-writes (a
+        near-full match pins its final chunk to ``T - seq_len``, which
+        overlaps the shared region — those blocks copy-on-write at
+        dispatch, and the copies are real pool demand).  A full match
+        pledges nothing.
+        """
+        bsz = self.session.kv_block_size
+        T, S = len(prefix), self.seq_len
+        total = blocks_for_rows(T, bsz)
+        if self.prefix_index is None:
+            return None, chunk_starts(T, S), total
+        match = self.prefix_index.match(prefix)
+        if match.full:
+            return match, [], 0
+        start0 = min(match.rows, T - S)
+        if start0 < 1:
+            # nothing matched, or the suffix schedule would restart at
+            # offset 0 anyway (prompt barely longer than one chunk):
+            # plain admission, no attach
+            return None, chunk_starts(T, S), total
+        starts = list(range(start0, T - S + 1, S))
+        if starts[-1] != T - S:
+            starts.append(T - S)
+        overlap_cows = match.rows // bsz - start0 // bsz
+        return match, starts, (total - len(match.blocks)) + overlap_cows
+
+    def _inflight_covers(self, prefix: tuple[int, ...], matched: int) -> bool:
+        """Is a resident mid-chunking prompt about to index a strictly
+        longer prefix of ``prefix`` than the ``matched`` rows the trie
+        already holds?  (Loop thread only; drives admission deferral.)"""
+        bsz = self.session.kv_block_size
+        for b in self._chunks:
+            h = self._slots[b]
+            if h is None:
+                continue
+            other = h.prefix()
+            lcp = 0
+            for a, c in zip(prefix, other):
+                if a != c:
+                    break
+                lcp += 1
+            covered = (len(prefix) if lcp == len(prefix) == len(other)
+                       else (lcp // bsz) * bsz)
+            if covered > matched:
+                return True
+        return False
+
+    def _reclaim_parked(self, e: KVCapacityError, want: int) -> int:
+        """On pool exhaustion mid-flight, try to fund a retry from the
+        index's LRU parking lot before evicting anyone.  Returns blocks
+        freed (0 when the cache is off, the error is not pool-shaped, or
+        nothing is reclaimable — caller falls through to eviction)."""
+        if self.prefix_index is None or e.reason != "pool":
+            return 0
+        freed = self.prefix_index.reclaim(max(1, want))
+        self.stats.prefix_reclaimed_blocks += freed
+        return freed
+
+    def audit_sharing(self, *, strict: bool = True):
+        """Run the KV-sharing audit (rules KV006/KV007 state half) over
+        the live pool: every table/index block reference must be backed
+        by a matching refcount.  Raises
+        :class:`~repro.deploy.verify.PlanVerificationError` on any
+        inconsistency; returns the (empty) diagnostics list otherwise.
+        Paged engines only."""
+        if not self.paged:
+            raise RuntimeError("audit_sharing needs a paged engine")
+        from repro.deploy.verify import check_sharing
+
+        idx = (self.prefix_index.pinned_blocks()
+               if self.prefix_index is not None else ())
+        return check_sharing(self.session.sharing_state(idx), strict=strict,
+                             context="engine.audit_sharing")
 
     def _advance_chunks(self) -> bool:
         """Paged chunked prefill: advance EVERY mid-chunking slot by one
@@ -834,6 +1012,8 @@ class Engine:
                 # same step — the host-side checks raise BEFORE the
                 # dispatch, so no device state needs unwinding
                 self.stats.prefill_time_s += time.perf_counter() - t0
+                if self._reclaim_parked(e, len(e.slots)):
+                    continue  # parked prefix blocks funded a retry
                 for b in e.slots:
                     if self._slots[b] is not None:
                         self._finish(self._slots[b], "kv_capacity")
@@ -857,6 +1037,14 @@ class Engine:
                     # ONE device->host fetch covers every slot that
                     # finishes chunking this step
                     final_rows = jax.device_get(logits[:, -1])
+                if self.prefix_index is not None:
+                    # index the finished prefix NOW, before the consume
+                    # below can finish the request and free its chain:
+                    # the trie pins its own references, so the blocks
+                    # (and the cached logits row) outlive the slot
+                    self.prefix_index.insert(
+                        self._slots[b].prefix(),
+                        self.session.block_chain(b), final_rows[b])
                 self._consume_logits(b, final_rows[b])
             return True
 

@@ -98,12 +98,23 @@ class PoolExhausted(Exception):
 
 
 class BlockAllocator:
-    """Free-list allocator over the shared KV block pool.
+    """Refcounted free-list allocator over the shared KV block pool.
 
     Hands out physical block ids ``1 .. n_blocks`` (0 is the scratch
     block).  Allocation order is deterministic — lowest free id first —
     so identical request schedules produce identical block tables (and
     hence bit-identical dispatch inputs) run after run.
+
+    Every live block carries a **refcount** (1 at :meth:`allocate`).  A
+    prefix-cache hit shares an existing full block via :meth:`fork`
+    (refcount + 1, no copy); :meth:`free` decrements and only returns the
+    block to the free list when the count reaches 0; :meth:`cow` is the
+    copy-on-write step a holder takes *before the first write* into a
+    shared block — it hands back a private replacement block and drops one
+    share of the original.  Invariant maintained throughout::
+
+        n_free + len(live blocks) == n_blocks      (conservation)
+        refcount(b) >= 1 for every live block      (no zombie entries)
     """
 
     def __init__(self, n_blocks: int):
@@ -114,6 +125,7 @@ class BlockAllocator:
         # are small (a pool has tens to thousands of blocks)
         self._free = list(range(1, self.n_blocks + 1))
         self._owner: dict[int, int | None] = {}
+        self._ref: dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -123,9 +135,19 @@ class BlockAllocator:
     def n_used(self) -> int:
         return self.n_blocks - len(self._free)
 
+    @property
+    def n_shared(self) -> int:
+        """Blocks currently referenced by more than one holder."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
     def owners(self) -> set:
-        """Distinct owners currently holding at least one block."""
+        """Distinct owners currently holding at least one block (for a
+        shared block, the owner recorded at :meth:`allocate` time)."""
         return set(self._owner.values())
+
+    def refcount(self, block: int) -> int:
+        """Current reference count of ``block`` (0 if free/unallocated)."""
+        return self._ref.get(int(block), 0)
 
     def allocate(self, n: int = 1, *, owner=None) -> list[int]:
         """Take ``n`` blocks (all or nothing).  Raises :class:`PoolExhausted`
@@ -137,15 +159,55 @@ class BlockAllocator:
         taken, self._free = self._free[:n], self._free[n:]
         for b in taken:
             self._owner[b] = owner
+            self._ref[b] = 1
         return taken
 
+    def fork(self, blocks, *, owner=None) -> list[int]:
+        """Share already-live blocks: refcount + 1 each, no data movement.
+
+        All-or-nothing — forking a free/unallocated id fails loudly
+        without mutating state.  ``owner`` is accepted for call-site
+        symmetry with :meth:`allocate` but the residency owner recorded
+        at allocation time is kept (the pool rows are still theirs).
+        """
+        ids = [int(b) for b in blocks]
+        for b in ids:
+            if b not in self._ref:
+                raise ValueError(f"cannot fork block {b}: not allocated")
+        for b in ids:
+            self._ref[b] += 1
+        return ids
+
+    def cow(self, block: int, *, owner=None) -> tuple[int, bool]:
+        """Copy-on-write: make ``block`` privately writable by its caller.
+
+        Returns ``(block, False)`` when the caller already holds the only
+        reference (write in place).  Otherwise allocates a fresh block
+        (``PoolExhausted`` propagates *before* any state changes),
+        releases one share of the original, and returns
+        ``(new_block, True)`` — the caller must copy the pool rows and
+        patch its block table before writing.
+        """
+        b = int(block)
+        if b not in self._ref:
+            raise ValueError(f"cannot cow block {b}: not allocated")
+        if self._ref[b] == 1:
+            return b, False
+        (fresh,) = self.allocate(1, owner=owner)
+        self._ref[b] -= 1
+        return fresh, True
+
     def free(self, blocks) -> None:
-        """Return blocks to the pool (idempotence is a caller bug: freeing
-        an unowned or scratch id fails loudly)."""
+        """Drop one reference per block; a block returns to the pool only
+        when its last reference is dropped (freeing an unowned or scratch
+        id fails loudly — idempotence is a caller bug)."""
         for b in blocks:
             b = int(b)
-            if b not in self._owner:
+            if b not in self._ref:
                 raise ValueError(f"block {b} is not allocated (double free?)")
-            del self._owner[b]
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                del self._owner[b]
+                self._free.append(b)
         self._free.sort()

@@ -67,6 +67,13 @@ def _stats_payload(engine: AsyncEngine) -> dict:
         "goodput_under_slo": s.goodput_under_slo(),
         "step_p50_ms": s.step_latency_p50() * 1e3,
         "step_p99_ms": s.step_latency_p99() * 1e3,
+        # prefix cache / copy-on-write KV (all zero unless the artifact
+        # was compiled with prefix_cache=True)
+        "prefix_hit_blocks": s.prefix_hit_blocks,
+        "prefix_hit_rate": s.prefix_hit_rate(),
+        "blocks_shared": s.blocks_shared,
+        "cow_copies": s.cow_copies,
+        "scheduler": engine.engine.scheduler.snapshot(),
     }
 
 

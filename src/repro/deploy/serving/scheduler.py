@@ -121,6 +121,19 @@ class Scheduler:
         queued request ahead of the shed one."""
         return max(1e-3, self._pop_ewma_s * (queue_depth + 1))
 
+    def snapshot(self) -> dict:
+        """Queue-health stats for monitoring surfaces (``/v1/stats``):
+        policy name, depth, shed threshold, and the admission-interval
+        EWMA behind :meth:`retry_after_s`."""
+        depth = len(self)
+        return {
+            "policy": self.name,
+            "queue_depth": depth,
+            "max_queue": self.max_queue,
+            "pop_interval_ewma_s": self._pop_ewma_s,
+            "retry_after_s": self.retry_after_s(depth),
+        }
+
     # -- the policy surface -------------------------------------------------
 
     def __len__(self) -> int:
@@ -143,9 +156,13 @@ class Scheduler:
 
     def peek(self, now: float) -> "RequestHandle | None":
         """The request the policy would admit next (None when empty).
-        The engine peeks before popping so pool-occupancy admission can
-        refuse without reordering: a head that does not fit blocks the
-        queue until completions free capacity — no overtaking."""
+        The engine peeks before popping so admission can refuse without
+        reordering: a head that does not fit the pool — or whose prompt
+        a resident is mid-prefilling (prefix-cache deferral: waiting one
+        step turns the admission into a shared-block hit) — blocks the
+        queue until the blocker resolves; no overtaking.  ``peek`` must
+        therefore be non-consuming and stable across repeated calls with
+        no intervening mutation."""
         raise NotImplementedError
 
     def pop(self, now: float) -> "RequestHandle | None":

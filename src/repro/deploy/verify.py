@@ -36,6 +36,16 @@ Four analyses:
    :func:`~repro.core.heterogeneous.ita_supports` code path the lowering
    used) and diff it against the recorded engine column.
 
+A fifth analysis audits *runtime* paged-pool state rather than the
+static plan: **KV sharing** (``KV006``/``KV007``) over a
+:class:`KVSharingState` snapshot — per-block refcounts vs the references
+actually held by slot block tables and the prefix index, and
+copy-on-write legality for planned writes (a write targeting a block
+reachable from more than one holder without a preceding COW is an
+error).  :func:`verify_sharing` / :func:`check_sharing` are the entry
+points; ``InferenceSession.sharing_state()`` and
+``Engine.audit_sharing()`` build the snapshot from a live session.
+
 Entry points: :func:`verify` (diagnostics list), :func:`check` (raise
 :class:`PlanVerificationError` on errors — ``strict=True`` promotes
 warnings), and the CLI::
@@ -64,6 +74,8 @@ KV003  error     illegal fused region (barrier/KV write inside, engine mix,
                  nesting, port-closure violation)
 KV004  error     paged block pool touched by a non-paged kind
 KV005  error     paged pool geometry broken (block size / pool rows)
+KV006  error     refcount inconsistent with table + prefix-index references
+KV007  error     write into a shared block without a preceding copy-on-write
 PAIR01 error     prefill/decode pair incoherent (phase, max_len, paging)
 QNT001 error     requant multiplier unrepresentable (saturated / zero)
 QNT002 error     int32 GEMM accumulator can overflow
@@ -716,6 +728,152 @@ def check(
     (``strict=True``: on any diagnostic at all).  Returns the full
     diagnostics list — warnings only, unless strict never raised."""
     diags = verify(artifact)
+    offending = diags if strict else [d for d in diags if d.severity == "error"]
+    if offending:
+        raise PlanVerificationError(diags, context=context)
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# KV sharing audit (KV006 / KV007) — runtime pool state, not the static plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KVWrite:
+    """One planned write into the paged pool, for the COW-legality audit.
+
+    ``slot`` is the writing request slot, ``block`` the physical target,
+    ``cow`` whether a copy-on-write was performed for this write (the
+    target must then be exclusively owned by the writer).
+    """
+
+    slot: int
+    block: int
+    cow: bool = False
+
+
+@dataclass(frozen=True)
+class KVSharingState:
+    """Snapshot of the paged pool's sharing structure.
+
+    Built by ``InferenceSession.sharing_state()`` from a live session (or
+    by hand in tests): ``refcounts`` maps every *live* physical block to
+    its allocator refcount, ``tables`` maps each occupied slot to its
+    block chain in logical order (scratch entries excluded),
+    ``index_blocks`` lists the prefix index's pins — one entry per
+    reference, so a block pinned by both a trie node and a terminal
+    appears twice.  ``writes`` optionally carries planned
+    :class:`KVWrite` descriptors for the COW-before-write audit.
+    """
+
+    n_blocks: int
+    refcounts: dict
+    tables: dict
+    index_blocks: tuple = ()
+    writes: tuple = ()
+
+
+def verify_sharing(state: KVSharingState,
+                   label: str = "kv-pool") -> list[PlanDiagnostic]:
+    """Audit a :class:`KVSharingState` snapshot.
+
+    **KV006 — refcount consistency.**  Every block a slot table or the
+    prefix index references must be live (refcount >= 1) and in range,
+    and every live block's refcount must equal exactly the number of
+    references actually held (table entries + index pins).  A refcount
+    above the held references leaks pool capacity forever; below, the
+    block returns to the free list while still reachable — another
+    request's writes then land in a live trajectory's rows.
+
+    **KV007 — COW-before-write legality.**  A planned write must target
+    a block in the writer's own table; a non-COW write may only hit a
+    block with refcount 1 (exclusively owned); a COW write's fresh
+    target must likewise end up exclusively owned.  Writing a shared
+    block in place would silently corrupt every sibling sharing it.
+    """
+    diags: list[PlanDiagnostic] = []
+
+    def emit(rule, message, *, node="", tensor="", hint=""):
+        diags.append(PlanDiagnostic(
+            rule=rule, severity="error", message=message,
+            plan=label, node=node, tensor=tensor, hint=hint,
+        ))
+
+    refs = {int(b): int(c) for b, c in state.refcounts.items()}
+    held: dict[int, int] = {}
+
+    def reference(block, holder):
+        b = int(block)
+        held[b] = held.get(b, 0) + 1
+        if b < 1 or b > state.n_blocks:
+            emit("KV006",
+                 f"{holder} references block {b}, outside the pool's "
+                 f"1..{state.n_blocks} (0 is scratch)",
+                 node=holder, tensor=f"block{b}",
+                 hint="tables and the index may only hold allocator-issued "
+                      "ids — scratch is a write sink, never referenced")
+        elif refs.get(b, 0) < 1:
+            emit("KV006",
+                 f"{holder} references block {b} which is dead "
+                 f"(refcount 0 / on the free list)",
+                 node=holder, tensor=f"block{b}",
+                 hint="a freed-but-referenced block will be handed to the "
+                      "next allocation and overwritten under this holder")
+
+    for slot, chain in sorted(state.tables.items()):
+        for b in chain:
+            reference(b, f"slot{int(slot)}")
+    for b in state.index_blocks:
+        reference(b, "prefix-index")
+
+    for b in sorted(refs):
+        have = held.get(b, 0)
+        if refs[b] != have:
+            emit("KV006",
+                 f"block {b} refcount is {refs[b]} but {have} reference(s) "
+                 f"are actually held",
+                 tensor=f"block{b}",
+                 hint="refcount > references leaks the block forever; "
+                      "refcount < references frees it while reachable")
+
+    for w in state.writes:
+        slot, b = int(w.slot), int(w.block)
+        chain = tuple(int(x) for x in state.tables.get(slot, ()))
+        where = f"slot{slot}"
+        if b not in chain:
+            emit("KV007",
+                 f"write targets block {b} which is not in slot {slot}'s "
+                 f"table {chain}",
+                 node=where, tensor=f"block{b}",
+                 hint="a slot may only write rows its own table maps")
+            continue
+        if refs.get(b, 0) > 1 and not w.cow:
+            emit("KV007",
+                 f"write into block {b} (refcount {refs[b]}) without a "
+                 f"preceding copy-on-write",
+                 node=where, tensor=f"block{b}",
+                 hint="cow() the block first — an in-place write would "
+                      "corrupt every sibling sharing it")
+        elif w.cow and refs.get(b, 0) != 1:
+            emit("KV007",
+                 f"copy-on-write produced block {b} with refcount "
+                 f"{refs.get(b, 0)}, expected exclusive ownership (1)",
+                 node=where, tensor=f"block{b}",
+                 hint="a COW target shared again before the write defeats "
+                      "the copy")
+    return diags
+
+
+def check_sharing(
+    state: KVSharingState,
+    *,
+    strict: bool = False,
+    context: str = "",
+) -> list[PlanDiagnostic]:
+    """:func:`verify_sharing` and raise :class:`PlanVerificationError` on
+    any error (KV006/KV007 are all errors, so ``strict`` only matters if
+    warning-severity sharing rules are added later)."""
+    diags = verify_sharing(state)
     offending = diags if strict else [d for d in diags if d.severity == "error"]
     if offending:
         raise PlanVerificationError(diags, context=context)

@@ -193,6 +193,79 @@ class TestBlockAllocatorProperties:
             alloc.free(blocks)
         assert alloc.n_free == n_blocks  # everything returned
 
+    @given(
+        n_blocks=st.integers(1, 16),
+        ops=st.lists(
+            st.tuples(st.integers(0, 3),  # holder id
+                      st.sampled_from(["alloc", "fork", "cow", "free"]),
+                      st.integers(0, 3)),  # count / source holder / pick
+            max_size=60,
+        ),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_fork_cow_free_interleavings(self, n_blocks, ops):
+        """Random fork/cow/free traffic (the prefix-cache access
+        pattern): the allocator's refcount for every live block always
+        equals the references the model actually holds, conservation
+        (``n_free + live == n_blocks``) holds after every operation,
+        failed cow/alloc mutate nothing, and draining every reference —
+        shared blocks freed once per holder — returns the whole pool
+        without ever double-freeing."""
+        from repro.deploy.paging import BlockAllocator, PoolExhausted
+
+        alloc = BlockAllocator(n_blocks)
+        held: dict[int, list[int]] = {}  # holder -> refs (list = multiset)
+
+        def refs_of(b):
+            return sum(blocks.count(b) for blocks in held.values())
+
+        for holder, op, k in ops:
+            if op == "alloc":
+                before = alloc.n_free
+                try:
+                    got = alloc.allocate(k, owner=holder)
+                except PoolExhausted:
+                    assert alloc.n_free == before  # all-or-nothing
+                    continue
+                held.setdefault(holder, []).extend(got)
+            elif op == "fork":
+                src = held.get(k)
+                if not src:
+                    continue
+                take = src[: max(1, holder)]
+                assert alloc.fork(take) == take
+                held.setdefault(holder, []).extend(take)
+            elif op == "cow":
+                mine = held.get(holder)
+                if not mine:
+                    continue
+                b = mine[k % len(mine)]
+                before = alloc.n_free
+                shared = refs_of(b) > 1
+                try:
+                    fresh, copied = alloc.cow(b, owner=holder)
+                except PoolExhausted:
+                    # loud and mutation-free: the share survives intact
+                    assert alloc.n_free == before
+                    assert alloc.refcount(b) == refs_of(b)
+                    continue
+                assert copied == shared
+                if copied:
+                    mine[mine.index(b)] = fresh  # one ref moved over
+                else:
+                    assert fresh == b  # exclusive: write in place
+            elif op == "free":
+                if held.get(holder):
+                    alloc.free(held.pop(holder))
+            live = {b for blocks in held.values() for b in blocks}
+            assert alloc.n_free + len(live) == n_blocks  # conservation
+            for b in live:
+                assert alloc.refcount(b) == refs_of(b) >= 1
+            assert alloc.n_shared == sum(refs_of(b) > 1 for b in live)
+        for blocks in held.values():
+            alloc.free(blocks)  # would raise on any double-free
+        assert alloc.n_free == n_blocks
+
 
 class TestPagedPlanProperties:
     @given(
