@@ -114,7 +114,7 @@ def main(argv=None):
     eng.submit(prompts[0], 3).result(timeout=600)
     eng.engine.reset_stats()
     toks, wall = _engine_direct(eng, prompts, args.gen)
-    s = eng.stats
+    s = eng.stats_snapshot()  # one consistent copy; the loop still runs
     print(f"engine,{args.clients},{n},{toks},{toks / wall:.1f},"
           f"{s.ttft(50) * 1e3:.2f},{s.ttft(99) * 1e3:.2f},"
           f"{s.tpot(50) * 1e3:.2f},{s.tpot(99) * 1e3:.2f}")
@@ -124,7 +124,7 @@ def main(argv=None):
     host, port = fe.start()
     toks, wall, ttfts = _over_http(host, port, prompts, args.gen,
                                    args.clients)
-    s = eng.stats
+    s = eng.stats_snapshot()
     print(f"http,{args.clients},{n},{toks},{toks / wall:.1f},"
           f"{s.ttft(50) * 1e3:.2f},{s.ttft(99) * 1e3:.2f},"
           f"{s.tpot(50) * 1e3:.2f},{s.tpot(99) * 1e3:.2f}")

@@ -38,6 +38,18 @@ refcounted blocks; the engine attaches matches copy-on-write and
 prefills only the novel suffix (``compile(cfg, ...,
 prefix_cache=True)``).  ``verify.check_sharing`` audits the live pool's
 refcount/COW invariants (rules KV006/KV007).
+
+``sanitize`` is the concurrency & KV-lifetime sanitizer over the whole
+serving stack: a static lock-order lint (the declared ``serving.cv ->
+engine.lock -> frontend.hlock`` lattice, checked over the cross-module
+acquisition graph) plus an ``InferenceSession`` thread-affinity lint
+(``python -m repro.deploy.sanitize``), and — under ``REPRO_SANITIZE=1``
+— a lockdep-style runtime order checker on every serving lock and a
+shadow block-lifecycle tracker that turns use-after-free / double-free
+/ skipped-COW / refcount-drift into structured ``BLK*`` diagnostics at
+the offending call site.  Small-scope interleaving model checks of the
+fork/COW/free and scheduler cancel protocols ride along
+(``--interleavings``).
 """
 
 from repro.deploy import (  # noqa: F401
@@ -53,6 +65,7 @@ from repro.deploy import (  # noqa: F401
     patterns,
     plan,
     prefix,
+    sanitize,
     serving,
     tiler,
     verify,
@@ -85,6 +98,15 @@ from repro.deploy.engine import (  # noqa: F401
 )
 from repro.deploy.executor import PlanBindingError  # noqa: F401
 from repro.deploy.memory import MemoryPlanError  # noqa: F401
+from repro.deploy.sanitize import (  # noqa: F401
+    SanitizerDiagnostic,
+    SanitizerError,
+    ShadowPool,
+    affinity_report,
+    check_interleavings,
+    lint_affinity,
+    lint_lock_order,
+)
 from repro.deploy.verify import (  # noqa: F401
     KVSharingState,
     KVWrite,

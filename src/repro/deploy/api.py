@@ -873,6 +873,8 @@ class InferenceSession:
                 self._release_blocks(b)
             for b in range(self.batch_size):
                 self._grow_table(b, need)
+            for b in range(self.batch_size):
+                self._note_writes(b, 0, s)
             logits, self._pool = self._chunk_fn(
                 self.weights, self._pool, tokens, jnp.int32(0),
                 jnp.asarray(self._tables),
@@ -978,6 +980,7 @@ class InferenceSession:
         need = blocks_for_rows(start + s, self._pair.kv_block_size)
         self._grow_table(slot, need)
         self._cow_range(slot, start, start + s)
+        self._note_writes(slot, start, start + s)
         logits, self._pool = self._chunk_fn(
             self.weights, self._pool, tokens, jnp.int32(start),
             jnp.asarray(self._tables[slot : slot + 1]),
@@ -1053,6 +1056,8 @@ class InferenceSession:
             # rows — bit-neutral, but still a write: COW keeps the
             # no-write-into-shared-blocks invariant unconditional
             self._cow_range(slot, start, start + s)
+        for slot, (_, start) in checked.items():
+            self._note_writes(slot, start, start + s)
         batch_tokens = np.zeros((self.batch_size, s), np.int32)
         starts = np.zeros((self.batch_size,), np.int32)
         # parked lanes write through all-scratch tables — handing them
@@ -1224,6 +1229,21 @@ class InferenceSession:
             chain[chain.index(blk)] = fresh
             self._cow_copies += 1
 
+    def _note_writes(self, slot: int, lo: int, hi: int) -> None:
+        """Tell the shadow block sanitizer (``REPRO_SANITIZE=1``) that
+        the next dispatch writes ``slot``'s cache rows ``[lo, hi)`` —
+        it fails with BLK001 (freed block) or BLK003 (still-shared
+        block, i.e. a skipped COW) at this call site instead of letting
+        the scatter corrupt another request's rows silently."""
+        shadow = self._alloc.shadow
+        if shadow is None or hi <= lo:
+            return
+        bsz = self._pair.kv_block_size
+        for i in range(lo // bsz, blocks_for_rows(hi, bsz)):
+            blk = int(self._tables[slot, i])
+            if blk != SCRATCH_BLOCK:
+                shadow.write(slot, blk, self._alloc)
+
     def decode(self, tokens, pos=None, *, active=None):
         """One batched continuous-decode dispatch.
 
@@ -1299,6 +1319,7 @@ class InferenceSession:
                     # attached prefix whose tail block siblings/the index
                     # still reference) materializes a private copy
                     self._cow_range(b, int(pos[b]), int(pos[b]) + 1)
+                    self._note_writes(b, int(pos[b]), int(pos[b]) + 1)
             logits, self._pool = self._decode_fn(
                 self.weights, self._pool, tokens, jnp.asarray(pos),
                 jnp.asarray(self._tables), jnp.asarray(act),

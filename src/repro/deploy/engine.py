@@ -72,7 +72,6 @@ import copy
 import dataclasses
 import enum
 import math
-import threading
 import time
 from typing import Callable, Sequence
 
@@ -82,6 +81,7 @@ import numpy as np
 
 from repro.deploy.api import CompiledModel, InferenceSession, KVCapacityError
 from repro.deploy.paging import blocks_for_rows, chunk_starts
+from repro.deploy.sanitize import make_lock
 from repro.deploy.serving.scheduler import (
     FIFO,
     QueueFullError,
@@ -283,6 +283,10 @@ class EngineStats:
     # one-time static-verification cost of the artifact this engine runs
     # (CompiledModel.verify_ms; 0.0 when compiled with verify=False)
     verify_ms: float = 0.0
+    # findings recorded by point-in-time audit_sharing() calls (the
+    # shadow sanitizer's continuous findings are reported separately —
+    # see the "sanitize" section of /v1/stats)
+    audit_findings: int = 0
     step_times_s: list = dataclasses.field(default_factory=list)
     # request-level latency samples (engine clock): TTFT is submit ->
     # first *generated* token (queue wait + prefill + any preemption
@@ -290,6 +294,18 @@ class EngineStats:
     # between consecutive generated tokens of one request
     ttft_s: list = dataclasses.field(default_factory=list)
     tpot_s: list = dataclasses.field(default_factory=list)
+
+    def snapshot(self) -> "EngineStats":
+        """One consistent copy: scalar counters plus fresh copies of the
+        sample lists, so a reader on another thread never sees a
+        half-updated record or a list the loop is appending to.  Take it
+        under the engine lock — :meth:`Engine.stats_snapshot` does."""
+        out = dataclasses.replace(self)
+        out.step_times_s = list(self.step_times_s)
+        out.ttft_s = list(self.ttft_s)
+        out.tpot_s = list(self.tpot_s)
+        out._slo_outcomes = list(self._slo_outcomes)
+        return out
 
     def step_latency_s(self, pct: float) -> float:
         """Nearest-rank percentile of recorded scheduler-step wall times."""
@@ -485,7 +501,12 @@ class Engine:
         # queue-depth stats — so submit()/queued-cancel() are safe from
         # any thread while the loop thread admits.  Slot/device state is
         # loop-thread-only and never touched under this lock's waiters.
-        self._lock = threading.RLock()
+        # Reentrant: submit() holds it across _note_queue().  Under
+        # REPRO_SANITIZE=1 it is lockdep-tracked (sanitize.LOCK_LATTICE).
+        self._lock = make_lock("engine.lock", reentrant=True)
+        # the scheduler has no lock of its own — the engine serializes
+        # every mutation under _lock; the sanitizer proves it per call
+        self.scheduler.guard_lock = self._lock
         self.stats = EngineStats(
             max_batch=self.max_batch,
             dispatches_per_step=self.session.decode_dispatch_count,
@@ -632,6 +653,20 @@ class Engine:
     def idle(self) -> bool:
         return self.queue_depth == 0 and self.slots_busy == 0
 
+    def stats_snapshot(self) -> EngineStats:
+        """One consistent :class:`EngineStats` copy, taken under the
+        engine lock.  Cross-thread readers (``/v1/stats``, benchmark
+        CSVs) must use this instead of field-by-field reads of
+        ``self.stats``, which race the loop thread's updates."""
+        with self._lock:
+            return self.stats.snapshot()
+
+    def scheduler_snapshot(self) -> dict:
+        """The admission policy's snapshot, taken under the engine lock
+        (scheduler state is mutated under it on every submit/admit)."""
+        with self._lock:
+            return self.scheduler.snapshot()
+
     def reset_stats(self) -> EngineStats:
         """Zero the counters *and* the slot-reuse bookkeeping — e.g. after
         a warm-up pass, so a timed trace starts from a clean record."""
@@ -658,7 +693,8 @@ class Engine:
         try:
             return self._step()
         finally:
-            self.stats.step_times_s.append(time.perf_counter() - t_step)
+            with self._lock:  # stats mutate under the lock: see snapshot()
+                self.stats.step_times_s.append(time.perf_counter() - t_step)
 
     def _step(self) -> bool:
         worked = self._preempt()
@@ -697,7 +733,8 @@ class Engine:
                 # the failed dispatch's wall time still counts: dropping
                 # it made long capacity-churny traces look faster than
                 # the wall clock (ISSUE 5)
-                self.stats.decode_time_s += time.perf_counter() - t0
+                with self._lock:
+                    self.stats.decode_time_s += time.perf_counter() - t0
                 if self._reclaim_parked(e, len(e.slots)):
                     continue  # parked prefix blocks funded a retry
                 for b in e.slots:
@@ -706,9 +743,10 @@ class Engine:
                 active = decode_lanes()
                 continue
             jax.block_until_ready(logits)
-            self.stats.decode_time_s += time.perf_counter() - t0
-            self.stats.decode_dispatches += 1
-            self.stats.slot_steps_busy += len(active)
+            with self._lock:
+                self.stats.decode_time_s += time.perf_counter() - t0
+                self.stats.decode_dispatches += 1
+                self.stats.slot_steps_busy += len(active)
             # ONE device->host fetch for the whole step: per-slot
             # ``logits[b, -1]`` pulls used to round-trip once per resident
             # request per token (ISSUE 5)
@@ -855,21 +893,25 @@ class Engine:
             handle.status = RequestStatus.PREFILLING
             self._slots[free] = handle
             if free in self._used_slots:
-                self.stats.slots_recycled += 1
+                with self._lock:
+                    self.stats.slots_recycled += 1
             self._used_slots.add(free)
             prefix = handle.prefix()
             if self.paged:
                 if self.prefix_index is not None:
-                    self.stats.prefix_lookups += 1
+                    with self._lock:
+                        self.stats.prefix_lookups += 1
                 if match is not None and match.hit:
                     self.session.attach_prefix(free, match.blocks, match.rows)
-                    self.stats.prefix_hits += 1
-                    self.stats.prefix_hit_blocks += len(match.blocks)
+                    with self._lock:
+                        self.stats.prefix_hits += 1
+                        self.stats.prefix_hit_blocks += len(match.blocks)
                 if match is not None and match.full:
                     # zero-prefill admission: the whole prompt is resident
                     # and the cached last-token logits row feeds sampling
                     # directly — the slot enters the decode lanes this step
-                    self.stats.full_prefix_hits += 1
+                    with self._lock:
+                        self.stats.full_prefix_hits += 1
                     self._pos[free] = match.rows
                     self._consume_logits(free, match.logits)
                 else:
@@ -884,9 +926,10 @@ class Engine:
                 t0 = time.perf_counter()
                 logits = self.session.prefill_slot(free, head)
                 jax.block_until_ready(logits)
-                self.stats.prefill_time_s += time.perf_counter() - t0
-                self.stats.prefill_dispatches += 1
-                self.stats.prompt_tokens_prefilled += self.seq_len
+                with self._lock:
+                    self.stats.prefill_time_s += time.perf_counter() - t0
+                    self.stats.prefill_dispatches += 1
+                    self.stats.prompt_tokens_prefilled += self.seq_len
                 self._pos[free] = self.seq_len
                 self._consume_logits(free, jax.device_get(logits[0, -1]))
             admitted.add(free)
@@ -954,24 +997,40 @@ class Engine:
         if self.prefix_index is None or e.reason != "pool":
             return 0
         freed = self.prefix_index.reclaim(max(1, want))
-        self.stats.prefix_reclaimed_blocks += freed
+        with self._lock:
+            self.stats.prefix_reclaimed_blocks += freed
         return freed
 
-    def audit_sharing(self, *, strict: bool = True):
+    def audit_sharing(self, *, strict: bool = True, source: str = "audit"):
         """Run the KV-sharing audit (rules KV006/KV007 state half) over
         the live pool: every table/index block reference must be backed
         by a matching refcount.  Raises
         :class:`~repro.deploy.verify.PlanVerificationError` on any
         inconsistency; returns the (empty) diagnostics list otherwise.
-        Paged engines only."""
+        Paged engines only.
+
+        ``source`` tags every emitted diagnostic
+        (``PlanDiagnostic.source``) so point-in-time audit findings stay
+        distinguishable from the shadow sanitizer's continuous findings
+        (``source="sanitizer"``) in logs and ``/v1/stats``."""
         if not self.paged:
             raise RuntimeError("audit_sharing needs a paged engine")
-        from repro.deploy.verify import check_sharing
+        from repro.deploy.verify import PlanVerificationError, check_sharing
 
         idx = (self.prefix_index.pinned_blocks()
                if self.prefix_index is not None else ())
-        return check_sharing(self.session.sharing_state(idx), strict=strict,
-                             context="engine.audit_sharing")
+        try:
+            diags = check_sharing(self.session.sharing_state(idx),
+                                  strict=strict,
+                                  context=f"engine.audit_sharing[{source}]",
+                                  source=source)
+        except PlanVerificationError as e:
+            with self._lock:
+                self.stats.audit_findings += len(e.diagnostics)
+            raise
+        with self._lock:
+            self.stats.audit_findings += len(diags)
+        return diags
 
     def _advance_chunks(self) -> bool:
         """Paged chunked prefill: advance EVERY mid-chunking slot by one
@@ -1011,7 +1070,8 @@ class Engine:
                 # back to the pool, and the survivors retry within the
                 # same step — the host-side checks raise BEFORE the
                 # dispatch, so no device state needs unwinding
-                self.stats.prefill_time_s += time.perf_counter() - t0
+                with self._lock:
+                    self.stats.prefill_time_s += time.perf_counter() - t0
                 if self._reclaim_parked(e, len(e.slots)):
                     continue  # parked prefix blocks funded a retry
                 for b in e.slots:
@@ -1019,15 +1079,17 @@ class Engine:
                         self._finish(self._slots[b], "kv_capacity")
                 progressed = True  # the finishes ARE scheduler progress
                 continue
-            self.stats.prefill_time_s += time.perf_counter() - t0
-            self.stats.prefill_dispatches += 1
+            with self._lock:
+                self.stats.prefill_time_s += time.perf_counter() - t0
+                self.stats.prefill_dispatches += 1
             final_rows = None
             for b in pending:
                 if self._slots[b] is None:
                     continue  # evicted mid-loop by a streaming callback
                 start = self._chunks[b].pop(0)
-                self.stats.prompt_tokens_prefilled += (
-                    start + self.seq_len - prev_rows[b])
+                with self._lock:
+                    self.stats.prompt_tokens_prefilled += (
+                        start + self.seq_len - prev_rows[b])
                 if self._chunks[b]:
                     continue
                 del self._chunks[b]
@@ -1067,7 +1129,8 @@ class Engine:
                 self._next_input[b] = handle.prompt[depth]
             else:
                 self._next_input[b] = handle.tokens[depth - len(handle.prompt)]
-            self.stats.prompt_tokens_forced += 1
+            with self._lock:
+                self.stats.prompt_tokens_forced += 1
             return
         tok = int(self.sampling(logits_row, handle.rid, len(handle.tokens)))
         handle.status = RequestStatus.DECODING
@@ -1113,8 +1176,9 @@ class Engine:
                 # pool-occupancy-aware eviction: the blocks return to the
                 # pool NOW, so survivors/queued requests can grow into them
                 self.session.free_slot(b)
-        if status is RequestStatus.DONE:
-            self.stats.requests_completed += 1
-        else:
-            self.stats.requests_evicted += 1
+        with self._lock:
+            if status is RequestStatus.DONE:
+                self.stats.requests_completed += 1
+            else:
+                self.stats.requests_evicted += 1
         self._note_queue()

@@ -27,7 +27,9 @@ def main(argv=None):
     from repro.launch.cli import (
         add_engine_args,
         add_plan_args,
+        add_sanitize_args,
         add_serving_args,
+        apply_sanitize_args,
         make_sampling,
         make_scheduler_from_args,
     )
@@ -45,9 +47,11 @@ def main(argv=None):
                     help="per-request access log")
     add_engine_args(ap)
     add_serving_args(ap)
+    add_sanitize_args(ap)
     add_plan_args(ap, via_plan_help="accepted for compatibility; serving is "
                   "always plan-backed")
     args = ap.parse_args(argv)
+    apply_sanitize_args(args)  # before any engine/allocator exists
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -36,6 +36,7 @@ from typing import Callable, Sequence
 
 from repro.deploy.api import CompiledModel, InferenceSession
 from repro.deploy.engine import Engine, RequestHandle, RequestStatus
+from repro.deploy.sanitize import make_condition
 
 
 class AsyncRequestHandle:
@@ -159,7 +160,10 @@ class AsyncEngine:
             self.engine = model
         else:
             self.engine = Engine(model, max_batch, **engine_kwargs)
-        self._cv = threading.Condition()
+        # "serving.cv" outranks "engine.lock" in the declared lattice
+        # (sanitize.LOCK_LATTICE); under REPRO_SANITIZE=1 this is a
+        # lockdep-tracked condition that flags order inversions
+        self._cv = make_condition("serving.cv")
         self._cancels: deque[RequestHandle] = deque()
         self._stop = False
         self._drain_on_stop = True
@@ -221,6 +225,12 @@ class AsyncEngine:
     @property
     def stats(self):
         return self.engine.stats
+
+    def stats_snapshot(self):
+        """One consistent :class:`EngineStats` copy taken under the
+        engine lock — safe to read field-by-field from any thread while
+        the loop is stepping (``/v1/stats``, benchmark CSVs)."""
+        return self.engine.stats_snapshot()
 
     @property
     def idle(self) -> bool:

@@ -35,7 +35,9 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro.deploy import sanitize
 from repro.deploy.api import KVCapacityError
+from repro.deploy.sanitize import make_lock
 from repro.deploy.serving.async_engine import AsyncEngine
 from repro.deploy.serving.scheduler import QueueFullError
 
@@ -44,7 +46,11 @@ _HISTORY = 1024
 
 
 def _stats_payload(engine: AsyncEngine) -> dict:
-    s = engine.stats
+    # one consistent copy under the engine lock — the loop thread keeps
+    # appending to the live EngineStats lists while we read them here
+    s = engine.stats_snapshot()
+    eng = engine.engine
+    shadow = eng.session.allocator.shadow if eng.paged else None
     return {
         "requests_submitted": s.requests_submitted,
         "requests_completed": s.requests_completed,
@@ -73,7 +79,16 @@ def _stats_payload(engine: AsyncEngine) -> dict:
         "prefix_hit_rate": s.prefix_hit_rate(),
         "blocks_shared": s.blocks_shared,
         "cow_copies": s.cow_copies,
-        "scheduler": engine.engine.scheduler.snapshot(),
+        "scheduler": eng.scheduler_snapshot(),
+        # concurrency / KV-lifetime sanitizer counters (all zero unless
+        # the process runs with REPRO_SANITIZE=1); "audit_findings" are
+        # point-in-time audit_sharing results, the others continuous
+        "sanitize": {
+            "enabled": sanitize.enabled(),
+            "lockdep_findings": len(sanitize.runtime_findings()),
+            "shadow_findings": len(shadow.findings) if shadow else 0,
+            "audit_findings": s.audit_findings,
+        },
     }
 
 
@@ -226,7 +241,9 @@ class ServingFrontend:
         self.verbose = verbose
         self.draining = False
         self._handles: dict[int, object] = {}
-        self._hlock = threading.Lock()
+        # leaf of the declared lock lattice: the registry bodies touch
+        # only lock-free handle properties, so nothing nests inside it
+        self._hlock = make_lock("frontend.hlock")
         self._httpd = ThreadingHTTPServer((host, port), _Handler)
         self._httpd.daemon_threads = True
         self._httpd.frontend = self  # type: ignore[attr-defined]

@@ -105,12 +105,28 @@ class Scheduler:
 
     # -- bookkeeping shared by implementations ------------------------------
 
+    def _assert_serialized(self) -> None:
+        """Prove the engine's serialization contract on every mutation.
+
+        The engine installs its submission lock as ``self.guard_lock``;
+        under ``REPRO_SANITIZE=1`` that lock is lockdep-tracked and this
+        raises a LOCK006 diagnostic if a mutating call arrives without
+        it held.  Free-standing schedulers (tests, benchmarks) have no
+        ``guard_lock`` and skip the check."""
+        lock = getattr(self, "guard_lock", None)
+        if lock is not None:
+            from repro.deploy.sanitize import require_held
+
+            require_held(lock, f"scheduler.{type(self).__name__}")
+
     def _shed_check(self, queue_depth: int, now: float) -> None:
+        self._assert_serialized()
         if self.max_queue is not None and queue_depth >= self.max_queue:
             raise QueueFullError(queue_depth, self.max_queue,
                                  self.retry_after_s(queue_depth))
 
     def _note_pop(self, now: float) -> None:
+        self._assert_serialized()
         if self._last_pop_t is not None:
             dt = max(1e-4, now - self._last_pop_t)
             self._pop_ewma_s += 0.25 * (dt - self._pop_ewma_s)

@@ -116,6 +116,10 @@ class PlanDiagnostic:
     node: str = ""  # offending node name ("" when tensor-level)
     tensor: str = ""  # offending tensor name ("" when node-level)
     hint: str = ""  # how to fix / what the rule protects
+    # who produced the finding: "" for plan verification, "audit" for a
+    # point-in-time audit_sharing() pass, "sanitizer" when the shadow
+    # block sanitizer triggered the check (continuous detection)
+    source: str = ""
 
     def format(self) -> str:
         where = self.plan
@@ -126,6 +130,8 @@ class PlanDiagnostic:
         out = f"{self.severity.upper():7s} {self.rule} {where}: {self.message}"
         if self.hint:
             out += f"  ({self.hint})"
+        if self.source:
+            out += f" [source={self.source}]"
         return out
 
     def __str__(self) -> str:
@@ -774,7 +780,8 @@ class KVSharingState:
 
 
 def verify_sharing(state: KVSharingState,
-                   label: str = "kv-pool") -> list[PlanDiagnostic]:
+                   label: str = "kv-pool", *,
+                   source: str = "audit") -> list[PlanDiagnostic]:
     """Audit a :class:`KVSharingState` snapshot.
 
     **KV006 — refcount consistency.**  Every block a slot table or the
@@ -797,6 +804,7 @@ def verify_sharing(state: KVSharingState,
         diags.append(PlanDiagnostic(
             rule=rule, severity="error", message=message,
             plan=label, node=node, tensor=tensor, hint=hint,
+            source=source,
         ))
 
     refs = {int(b): int(c) for b, c in state.refcounts.items()}
@@ -869,11 +877,15 @@ def check_sharing(
     *,
     strict: bool = False,
     context: str = "",
+    source: str = "audit",
 ) -> list[PlanDiagnostic]:
     """:func:`verify_sharing` and raise :class:`PlanVerificationError` on
     any error (KV006/KV007 are all errors, so ``strict`` only matters if
-    warning-severity sharing rules are added later)."""
-    diags = verify_sharing(state)
+    warning-severity sharing rules are added later).  ``source`` tags
+    each diagnostic with who triggered the audit — ``"audit"`` for a
+    point-in-time :meth:`Engine.audit_sharing` pass, ``"sanitizer"``
+    when the shadow block sanitizer escalated to a full-state audit."""
+    diags = verify_sharing(state, source=source)
     offending = diags if strict else [d for d in diags if d.severity == "error"]
     if offending:
         raise PlanVerificationError(diags, context=context)

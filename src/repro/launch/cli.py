@@ -115,6 +115,31 @@ def add_serving_args(ap: argparse.ArgumentParser) -> None:
                          "waited (starvation-freedom)")
 
 
+def add_sanitize_args(ap: argparse.ArgumentParser) -> None:
+    """Install the shared concurrency-sanitizer flag.
+
+    ``--sanitize`` turns on the lockdep runtime checker and the shadow
+    block-lifecycle tracker (:mod:`repro.deploy.sanitize`) for this
+    process — equivalent to running with ``REPRO_SANITIZE=1``.
+    """
+    ap.add_argument(
+        "--sanitize", action="store_true",
+        help="enable the concurrency & KV-lifetime sanitizer (lockdep "
+             "lock-order checking + shadow block tracking; same as "
+             "REPRO_SANITIZE=1)")
+
+
+def apply_sanitize_args(args) -> None:
+    """Flip the sanitizer env switch from the parsed ``--sanitize`` flag.
+
+    Must run *before* any engine/allocator is constructed — the lock
+    wrappers and the shadow pool are chosen at construction time."""
+    if getattr(args, "sanitize", False):
+        import os
+
+        os.environ["REPRO_SANITIZE"] = "1"
+
+
 def make_scheduler_from_args(args):
     """Build the engine scheduler policy from the shared argument block."""
     from repro.deploy.serving.scheduler import make_scheduler

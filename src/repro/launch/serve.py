@@ -126,7 +126,9 @@ def main(argv=None):
     from repro.launch.cli import (
         add_engine_args,
         add_plan_args,
+        add_sanitize_args,
         add_serving_args,
+        apply_sanitize_args,
         make_sampling,
         make_scheduler_from_args,
         resolve_requests,
@@ -140,9 +142,11 @@ def main(argv=None):
                          "--prompt-len (teacher-forced through batched decode)")
     add_engine_args(ap)
     add_serving_args(ap)
+    add_sanitize_args(ap)
     add_plan_args(ap, via_plan_help="accepted for compatibility; serving is "
                   "always plan-backed (compile() -> Engine/InferenceSession)")
     args = ap.parse_args(argv)
+    apply_sanitize_args(args)  # before any engine/allocator exists
 
     cfg = get_config(args.arch)
     if args.reduced:
